@@ -1,0 +1,63 @@
+"""Shared benchmark harness: DRAM-only / NVM-only / X-Men / Unimem runs."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.core import (CalibrationConstants, RuntimeConfig, UnimemRuntime,
+                        calibrate)
+from repro.core.data_objects import ObjectRegistry
+from repro.core.knapsack import Item, solve as knapsack_solve
+from repro.core.tiers import MachineProfile
+from repro.sim import SimulationEngine, SimWorkload
+
+MB = 1024 ** 2
+DEFAULT_DRAM = 256 * MB
+ITERS = 12
+
+
+def run_static(machine: MachineProfile, wl: SimWorkload, tier: str,
+               iters: int = ITERS):
+    reg = ObjectRegistry()
+    for n, s in wl.objects.items():
+        reg.alloc(n, s, tier=tier)
+    return SimulationEngine(machine, wl, registry=reg).run(iters)
+
+
+def run_unimem(machine: MachineProfile, wl: SimWorkload,
+               dram_bytes: int = DEFAULT_DRAM, iters: int = ITERS,
+               config: Optional[RuntimeConfig] = None,
+               cf: Optional[CalibrationConstants] = None):
+    cf = cf or calibrate(machine)
+    rt = UnimemRuntime(
+        machine,
+        config or RuntimeConfig(fast_capacity_bytes=dram_bytes), cf=cf)
+    for n, s in wl.objects.items():
+        rt.alloc(n, size_bytes=s, chunkable=wl.chunkable.get(n, False))
+    rt.start_loop([p.name for p in wl.phases],
+                  static_refs=wl.static_ref_counts())
+    eng = SimulationEngine(machine, wl, runtime=rt)
+    res = eng.run(iters)
+    return res, rt
+
+
+def run_xmen(machine: MachineProfile, wl: SimWorkload,
+             dram_bytes: int = DEFAULT_DRAM, iters: int = ITERS):
+    """X-Men baseline (Dulloor et al., EuroSys'16): offline profiling,
+    static hottest-first placement; no movement-cost model, no phase
+    adaptivity, homogeneous pattern per object."""
+    totals = wl.static_ref_counts()
+    items = [Item(n, totals.get(n, 0.0), sz) for n, sz in wl.objects.items()]
+    chosen = set(knapsack_solve(items, dram_bytes))
+    reg = ObjectRegistry()
+    for n, s in wl.objects.items():
+        reg.alloc(n, s, tier="fast" if n in chosen else "slow")
+    return SimulationEngine(machine, wl, registry=reg).run(iters)
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6   # us

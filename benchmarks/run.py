@@ -1,0 +1,261 @@
+"""Benchmark suite — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; ``derived`` carries the
+figure-specific quantity (normalized slowdowns, overlap fractions, ...).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig9
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core import PAPER_DRAM_NVM, calibrate
+from repro.sim import NPB_WORKLOADS, lm_train_workload
+from repro.core.tiers import TPU_V5E
+
+from .common import (DEFAULT_DRAM, MB, run_static, run_unimem, run_xmen)
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+# ---------------------------------------------------------------- Figs 2-3
+def bench_tier_sweep() -> None:
+    """NVM-only slowdown vs bandwidth (Fig 2) and latency (Fig 3)."""
+    for knob, scales in (("bw", [1.0, 0.5, 0.25, 0.125]),
+                         ("lat", [1.0, 2.0, 4.0, 8.0])):
+        for wl_name, make in NPB_WORKLOADS.items():
+            wl = make()
+            for s in scales:
+                m = (PAPER_DRAM_NVM.scaled(bw_scale=s) if knob == "bw"
+                     else PAPER_DRAM_NVM.scaled(lat_scale=s))
+                t0 = time.perf_counter()
+                dram = run_static(m, wl, "fast", iters=6)
+                nvm = run_static(m, wl, "slow", iters=6)
+                us = (time.perf_counter() - t0) * 1e6
+                ratio = nvm.steady_iteration_time / dram.steady_iteration_time
+                emit(f"fig{2 if knob == 'bw' else 3}_{wl_name}_{knob}{s}",
+                     us, f"nvm_over_dram={ratio:.3f}")
+
+
+# ------------------------------------------------------------------- Fig 4
+def bench_object_placement() -> None:
+    """Per-object placement impact on SP (Fig 4): which objects are
+    bandwidth- vs latency-sensitive."""
+    from repro.core.data_objects import ObjectRegistry
+    from repro.sim import SimulationEngine
+
+    wl = NPB_WORKLOADS["sp"]()
+    for nvm_cfg, mach in (("halfbw", PAPER_DRAM_NVM.scaled(bw_scale=0.5)),
+                          ("4xlat", PAPER_DRAM_NVM.scaled(lat_scale=4.0))):
+        dram = run_static(mach, wl, "fast", iters=6)
+        nvm = run_static(mach, wl, "slow", iters=6)
+        for target in (["in_buffer", "out_buffer"], ["lhs"], ["rhs"]):
+            reg = ObjectRegistry()
+            for n, s in wl.objects.items():
+                reg.alloc(n, s, tier="fast" if n in target else "slow")
+            t0 = time.perf_counter()
+            res = SimulationEngine(mach, wl, registry=reg).run(6)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig4_sp_{nvm_cfg}_{'+'.join(target)}", us,
+                 f"norm={res.steady_iteration_time / dram.steady_iteration_time:.3f};"
+                 f"nvm_only={nvm.steady_iteration_time / dram.steady_iteration_time:.3f}")
+
+
+# ---------------------------------------------------------------- Figs 9-10
+def bench_unimem_gap() -> None:
+    """DRAM-only vs NVM-only vs X-Men vs Unimem (Figs 9-10)."""
+    for fig, mach in (("fig9", PAPER_DRAM_NVM.scaled(bw_scale=0.5)),
+                      ("fig10", PAPER_DRAM_NVM.scaled(lat_scale=4.0))):
+        gaps = []
+        for wl_name, make in NPB_WORKLOADS.items():
+            wl = make()
+            t0 = time.perf_counter()
+            dram = run_static(mach, wl, "fast")
+            nvm = run_static(mach, wl, "slow")
+            xmen = run_xmen(mach, wl)
+            uni, rt = run_unimem(mach, wl)
+            us = (time.perf_counter() - t0) * 1e6
+            d = dram.steady_iteration_time
+            gaps.append(uni.steady_iteration_time / d - 1)
+            emit(f"{fig}_{wl_name}", us,
+                 f"nvm={nvm.steady_iteration_time / d:.3f};"
+                 f"xmen={xmen.steady_iteration_time / d:.3f};"
+                 f"unimem={uni.steady_iteration_time / d:.3f};"
+                 f"strategy={rt.plan.strategy if rt.plan else 'none'}")
+        emit(f"{fig}_average", 0.0,
+             f"unimem_avg_gap={sum(gaps) / len(gaps) * 100:.1f}%"
+             f";paper_claim={'3%' if fig == 'fig9' else '7%'}")
+
+
+# ------------------------------------------------------------------ Fig 11
+def bench_ablation() -> None:
+    """Contribution of the four techniques (Fig 11): apply cumulatively
+    (1) global search, (2) +local search, (3) +partitioning, (4) +initial
+    placement."""
+    from repro.core import RuntimeConfig
+
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+    stages = [
+        ("global", dict(enable_local_search=False, enable_partitioning=False,
+                        enable_initial_placement=False)),
+        ("+local", dict(enable_partitioning=False,
+                        enable_initial_placement=False)),
+        ("+partition", dict(enable_initial_placement=False)),
+        ("+initial", dict()),
+    ]
+    for wl_name, make in NPB_WORKLOADS.items():
+        wl = make()
+        dram = run_static(mach, wl, "fast")
+        nvm = run_static(mach, wl, "slow")
+        base = nvm.steady_iteration_time
+        derived = [f"nvm={base / dram.steady_iteration_time:.3f}"]
+        t0 = time.perf_counter()
+        for name, kw in stages:
+            cfgr = RuntimeConfig(fast_capacity_bytes=DEFAULT_DRAM, **kw)
+            res, _ = run_unimem(mach, wl, config=cfgr)
+            derived.append(
+                f"{name}="
+                f"{res.steady_iteration_time / dram.steady_iteration_time:.3f}")
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig11_{wl_name}", us, ";".join(derived))
+
+
+# ----------------------------------------------------------------- Table 4
+def bench_migration_stats() -> None:
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+    for wl_name, make in NPB_WORKLOADS.items():
+        wl = make()
+        t0 = time.perf_counter()
+        res, rt = run_unimem(mach, wl)
+        us = (time.perf_counter() - t0) * 1e6
+        s = rt.stats()
+        emit(f"table4_{wl_name}", us,
+             f"migrations={s['n_moves']};"
+             f"moved_mb={s['moved_bytes'] / MB:.0f};"
+             f"overlap={100 * (s['overlap_fraction'] or 0):.0f}%;"
+             f"strategy={s['strategy']}")
+
+
+# ------------------------------------------------------------------ Fig 12
+def bench_scaling() -> None:
+    """Strong scaling (Fig 12): per-rank problem shrinks as ranks grow."""
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.6, lat_scale=1.89)  # Edison emu
+    for ranks in (4, 8, 16, 32, 64):
+        wl = NPB_WORKLOADS["cg"](scale=4.0 / ranks)
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        uni, rt = run_unimem(mach, wl)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig12_cg_ranks{ranks}", us,
+             f"unimem={uni.steady_iteration_time / dram.steady_iteration_time:.3f}")
+
+
+# ------------------------------------------------------------------ Fig 13
+def bench_dram_size() -> None:
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+    for size_mb in (128, 256, 512):
+        for wl_name in ("cg", "ft", "mg", "sp"):
+            wl = NPB_WORKLOADS[wl_name]()
+            t0 = time.perf_counter()
+            dram = run_static(mach, wl, "fast")
+            uni, _ = run_unimem(mach, wl, dram_bytes=size_mb * MB)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig13_{wl_name}_dram{size_mb}mb", us,
+                 f"unimem={uni.steady_iteration_time / dram.steady_iteration_time:.3f}")
+
+
+# ------------------------------------------- beyond-paper: LM tiering (v5e)
+def bench_lm_tiering() -> None:
+    """Optimizer-state offload on the TPU tier model: nemotron-340b-like
+    per-chip slice (the flagship dry-run cell, simulated end to end)."""
+    GB = 1024 ** 3
+    for name, layer_b, opt_b, act_b, layers in (
+            ("nemotron340b_chip", 28 * MB, 166 * MB, 18 * MB, 96),
+            ("dbrx132b_chip", 11 * MB, 64 * MB, 6 * MB, 40)):
+        wl = lm_train_workload(n_layers=layers, layer_bytes=layer_b,
+                               opt_bytes=opt_b, act_bytes=act_b,
+                               name=name, compute_per_group_s=0.012)
+        t0 = time.perf_counter()
+        hbm_unlimited = run_static(TPU_V5E, wl, "fast", iters=6)
+        host_all = run_static(TPU_V5E, wl, "slow", iters=6)
+        uni, rt = run_unimem(TPU_V5E, wl,
+                             dram_bytes=int(10 * GB), iters=8)
+        us = (time.perf_counter() - t0) * 1e6
+        d = hbm_unlimited.steady_iteration_time
+        emit(f"lm_tiering_{name}", us,
+             f"host_all={host_all.steady_iteration_time / d:.3f};"
+             f"unimem={uni.steady_iteration_time / d:.3f};"
+             f"overlap={100 * (rt.stats()['overlap_fraction'] or 0):.0f}%")
+
+
+# ---------------------------------------------------------------- kernels
+def bench_kernels() -> None:
+    """Interpret-mode sanity timing + analytic v5e roofline per kernel."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.core.tiers import V5E_PEAK_FLOPS_BF16, V5E_HBM_BW
+
+    key = jax.random.PRNGKey(0)
+    B, K, G, S, D = 1, 2, 2, 256, 128
+    q = jax.random.normal(key, (B, K, G, S, D), jnp.float32)
+    kv = jax.random.normal(key, (B, K, S, D), jnp.float32)
+    t0 = time.perf_counter()
+    ops.flash_attention(q, kv, kv, force_pallas=True,
+                        interpret=True).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    flops = 4 * B * K * G * S * S * D
+    bytes_ = 2 * (q.size + 2 * kv.size + q.size)
+    emit("kernel_flash_attention", us,
+         f"tpu_roofline_us="
+         f"{max(flops / V5E_PEAK_FLOPS_BF16, bytes_ / V5E_HBM_BW) * 1e6:.2f}")
+
+    x = jax.random.normal(key, (512, 1024), jnp.float32)
+    w = jax.random.normal(key, (1024, 512), jnp.float32)
+    t0 = time.perf_counter()
+    ops.tiered_matmul(x, w, force_pallas=True,
+                      interpret=True).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    flops = 2 * 512 * 1024 * 512
+    bytes_ = 2 * (x.size + w.size + 512 * 512)
+    emit("kernel_tiered_matmul", us,
+         f"tpu_roofline_us="
+         f"{max(flops / V5E_PEAK_FLOPS_BF16, bytes_ / V5E_HBM_BW) * 1e6:.2f}")
+
+
+BENCHES = {
+    "fig2_3": bench_tier_sweep,
+    "fig4": bench_object_placement,
+    "fig9_10": bench_unimem_gap,
+    "fig11": bench_ablation,
+    "table4": bench_migration_stats,
+    "fig12": bench_scaling,
+    "fig13": bench_dram_size,
+    "lm_tiering": bench_lm_tiering,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""nemotron-4-340b [dense]: GQA, squared-ReLU MLP.
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000
+[arXiv:2402.16819; unverified]
+
+The flagship tiering demo: optimizer state (4 TB fp32) cannot fit a single
+v5e pod's HBM — the Unimem planner offloads it to the host tier and streams
+shard updates (see launch/dryrun.py offload programs).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="squared_relu",
+    mlp_type="mlp",
+    attn_bias=False,
+)

@@ -1,0 +1,31 @@
+"""Unimem core: runtime data management on heterogeneous memory (the paper's
+contribution, adapted to TPU memory tiers)."""
+
+from .data_objects import DataObject, ObjectRegistry
+from .knapsack import Item, solve as knapsack_solve
+from .monitor import VariationMonitor
+from .mover import JaxTierBackend, ProactiveMover, SimTierBackend
+from .perfmodel import (CalibrationConstants, Sensitivity, benefit, calibrate,
+                        classify, consumed_bandwidth, movement_cost, weight)
+from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
+                    build_phase_graph)
+from .planner import MoveOp, PlacementPlan, Planner
+from .profiler import ObjectPhaseProfile, PhaseProfiler
+from .runtime import RuntimeConfig, UnimemRuntime
+from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
+                    STT_RAM, PCRAM, RERAM, TPU_V5E, TPU_V5E_VMEM,
+                    V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
+
+__all__ = [
+    "DataObject", "ObjectRegistry", "Item", "knapsack_solve",
+    "VariationMonitor", "JaxTierBackend", "ProactiveMover", "SimTierBackend",
+    "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
+    "consumed_bandwidth", "movement_cost", "weight",
+    "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",
+    "MoveOp", "PlacementPlan", "Planner",
+    "ObjectPhaseProfile", "PhaseProfiler",
+    "RuntimeConfig", "UnimemRuntime",
+    "MachineProfile", "TierSpec", "PROFILES", "PAPER_DRAM_NVM", "STT_RAM",
+    "PCRAM", "RERAM", "TPU_V5E", "TPU_V5E_VMEM",
+    "V5E_PEAK_FLOPS_BF16", "V5E_HBM_BW", "V5E_ICI_BW",
+]

@@ -1,0 +1,90 @@
+"""Target data objects.
+
+The paper's runtime manages *target data objects* — arrays the programmer
+registers with ``unimem_malloc``.  Here a :class:`DataObject` names a logical
+array (or group of arrays, e.g. one transformer layer's weights, one KV-cache
+block, one optimizer-state shard) whose tier residency the runtime controls.
+
+Objects may be *chunkable* (paper §3.2 "Handling large data objects"): 1-D
+regular arrays can be split into chunks that are placed independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional
+
+
+@dataclasses.dataclass
+class DataObject:
+    """A managed data object.
+
+    ``payload`` optionally binds a real JAX array (or pytree of arrays);
+    simulation-only objects carry just ``size_bytes``.
+    """
+
+    name: str
+    size_bytes: int
+    chunkable: bool = False
+    payload: Any = None
+    # Filled by partition.partition_object for chunks of a parent object.
+    parent: Optional[str] = None
+    chunk_index: Optional[int] = None
+    # Current tier name, maintained by the mover / simulator.
+    tier: str = "slow"
+    pinned: bool = False   # pinned objects are never moved (e.g. SSM state)
+
+    def __post_init__(self):
+        if self.size_bytes < 0:
+            raise ValueError(f"negative size for {self.name}")
+
+    @property
+    def is_chunk(self) -> bool:
+        return self.parent is not None
+
+
+class ObjectRegistry:
+    """Registry of target data objects (the ``unimem_malloc`` table)."""
+
+    def __init__(self) -> None:
+        self._objs: Dict[str, DataObject] = {}
+
+    def register(self, obj: DataObject) -> DataObject:
+        if obj.name in self._objs:
+            raise KeyError(f"duplicate data object {obj.name!r}")
+        self._objs[obj.name] = obj
+        return obj
+
+    def alloc(self, name: str, size_bytes: int, *, chunkable: bool = False,
+              payload: Any = None, tier: str = "slow",
+              pinned: bool = False) -> DataObject:
+        return self.register(DataObject(
+            name=name, size_bytes=size_bytes, chunkable=chunkable,
+            payload=payload, tier=tier, pinned=pinned))
+
+    def __getitem__(self, name: str) -> DataObject:
+        return self._objs[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._objs
+
+    def __iter__(self) -> Iterator[DataObject]:
+        return iter(self._objs.values())
+
+    def __len__(self) -> int:
+        return len(self._objs)
+
+    def names(self) -> List[str]:
+        return list(self._objs.keys())
+
+    def total_bytes(self) -> int:
+        return sum(o.size_bytes for o in self._objs.values())
+
+    def in_tier(self, tier: str) -> List[DataObject]:
+        return [o for o in self._objs.values() if o.tier == tier]
+
+    def bytes_in_tier(self, tier: str) -> int:
+        return sum(o.size_bytes for o in self._objs.values() if o.tier == tier)
+
+    def remove(self, name: str) -> None:
+        del self._objs[name]

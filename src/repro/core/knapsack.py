@@ -1,0 +1,95 @@
+"""0/1 knapsack for data placement (paper §3.1.3).
+
+Items are data objects with value ``w`` (Eq. 5, seconds of predicted benefit)
+and weight ``size_bytes``; capacity is the fast-tier budget.  Solved with
+dynamic programming over a quantized capacity grid; falls back to
+density-greedy when the DP table would be unreasonably large (the paper cites
+an empirical O((log n)^2) specialization; DP is exact and fast at our n).
+
+Items with non-positive value are never selected (moving them cannot help).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Item:
+    name: str
+    value: float        # w from Eq. (5); may be <= 0
+    size_bytes: int
+
+
+def _quantize(sizes: Sequence[int], capacity: int, max_cells: int) -> Tuple[np.ndarray, int]:
+    """Pick a quantum so the DP has at most ``max_cells`` capacity cells.
+
+    Sizes are rounded *up* (conservative: never overfills the fast tier)."""
+    if capacity <= 0:
+        return np.zeros(len(sizes), dtype=np.int64), 0
+    quantum = max(1, int(np.ceil(capacity / max_cells)))
+    qsizes = np.array([(s + quantum - 1) // quantum for s in sizes], dtype=np.int64)
+    qcap = capacity // quantum
+    return qsizes, qcap
+
+
+def solve(items: Sequence[Item], capacity_bytes: int,
+          *, max_cells: int = 1 << 14) -> List[str]:
+    """Return names of selected items maximizing total value under capacity."""
+    pos = [it for it in items if it.value > 0.0 and it.size_bytes <= capacity_bytes]
+    if not pos or capacity_bytes <= 0:
+        return []
+    qsizes, qcap = _quantize([it.size_bytes for it in pos], capacity_bytes, max_cells)
+    if qcap <= 0:
+        return []
+    n = len(pos)
+    if n * qcap > 50_000_000:   # DP too big -> density greedy
+        return _greedy(pos, capacity_bytes)
+
+    # DP over capacity; table[c] = best value using items so far within c.
+    values = np.array([it.value for it in pos], dtype=np.float64)
+    table = np.zeros(qcap + 1, dtype=np.float64)
+    keep = np.zeros((n, qcap + 1), dtype=bool)
+    for i in range(n):
+        s, v = int(qsizes[i]), values[i]
+        if s > qcap:
+            continue
+        cand = table[: qcap - s + 1] + v
+        better = cand > table[s:]
+        table[s:] = np.where(better, cand, table[s:])
+        keep[i, s:] = better
+    # backtrack
+    chosen: List[str] = []
+    c = qcap
+    for i in range(n - 1, -1, -1):
+        if c >= 0 and keep[i, c]:
+            chosen.append(pos[i].name)
+            c -= int(qsizes[i])
+    chosen.reverse()
+    return chosen
+
+
+def _greedy(items: Sequence[Item], capacity_bytes: int) -> List[str]:
+    """Value-density greedy (each object has distinct value per byte in
+    practice, matching the paper's empirical-complexity remark)."""
+    order = sorted(items, key=lambda it: it.value / max(it.size_bytes, 1),
+                   reverse=True)
+    out, used = [], 0
+    for it in order:
+        if used + it.size_bytes <= capacity_bytes:
+            out.append(it.name)
+            used += it.size_bytes
+    return out
+
+
+def total_value(items: Sequence[Item], chosen: Sequence[str]) -> float:
+    by = {it.name: it for it in items}
+    return sum(by[c].value for c in chosen)
+
+
+def total_size(items: Sequence[Item], chosen: Sequence[str]) -> int:
+    by = {it.name: it for it in items}
+    return sum(by[c].size_bytes for c in chosen)

@@ -1,0 +1,96 @@
+"""Large data object partitioning (paper §3.2 "Handling large data objects").
+
+An object larger than the fast tier can never be migrated whole.  The paper
+partitions *one-dimensional arrays with regular references* into chunks that
+are profiled and placed independently, and notes the trade-off: chunking adds
+movement frequency that is rarely hidden (only FT benefits in their suite).
+
+``partition_object`` splits a registered object into equal chunks; payloads
+that are single 1-D JAX arrays are physically split, otherwise the chunks are
+logical byte-ranges (simulation objects).  The runtime decides *whether* to
+chunk via ``should_partition`` — the conservative policy from the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from .data_objects import DataObject, ObjectRegistry
+from .phase import PhaseGraph
+
+
+def should_partition(obj: DataObject, fast_capacity: int,
+                     *, threshold: float = 1.0) -> bool:
+    """Partition only objects that cannot fit (``size > threshold*capacity``)
+    and are declared chunkable (regular 1-D references)."""
+    return obj.chunkable and obj.size_bytes > threshold * fast_capacity
+
+
+def partition_object(registry: ObjectRegistry, name: str,
+                     chunk_bytes: int) -> List[DataObject]:
+    """Split ``name`` into ceil(size/chunk_bytes) chunks, replacing it."""
+    obj = registry[name]
+    if chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be positive")
+    n_chunks = max(1, math.ceil(obj.size_bytes / chunk_bytes))
+    if n_chunks == 1:
+        return [obj]
+
+    payloads: List[Optional[object]] = [None] * n_chunks
+    if obj.payload is not None and hasattr(obj.payload, "ndim") \
+            and getattr(obj.payload, "ndim", 0) == 1:
+        arr = obj.payload
+        per = math.ceil(arr.shape[0] / n_chunks)
+        payloads = [arr[i * per:(i + 1) * per] for i in range(n_chunks)]
+
+    chunks = []
+    remaining = obj.size_bytes
+    for i in range(n_chunks):
+        sz = min(chunk_bytes, remaining)
+        remaining -= sz
+        chunks.append(registry.register(DataObject(
+            name=f"{name}#{i}", size_bytes=sz, chunkable=False,
+            payload=payloads[i], parent=name, chunk_index=i,
+            tier=obj.tier, pinned=obj.pinned)))
+    registry.remove(name)
+    return chunks
+
+
+def split_refs_to_chunks(graph: PhaseGraph, name: str, chunks: List[DataObject],
+                         per_chunk_refs: Optional[Dict[int, Dict[int, float]]] = None
+                         ) -> None:
+    """Rewrite phase reference counts of a partitioned object.
+
+    ``per_chunk_refs``: optional {phase_index: {chunk_index: accesses}} from
+    chunk-aware profiling; defaults to an even split (regular references)."""
+    n = len(chunks)
+    for ph in graph:
+        if name not in ph.refs:
+            continue
+        total = ph.refs.pop(name)
+        if per_chunk_refs and ph.index in per_chunk_refs:
+            dist = per_chunk_refs[ph.index]
+            s = sum(dist.values()) or 1.0
+            for c in chunks:
+                ph.refs[c.name] = total * dist.get(c.chunk_index, 0.0) / s
+        else:
+            for c in chunks:
+                ph.refs[c.name] = total / n
+
+
+def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
+                   fast_capacity: int, *, chunk_divisor: int = 4) -> List[str]:
+    """Apply the conservative policy: chunk each chunkable object that cannot
+    fit the fast tier into ``capacity/chunk_divisor``-byte chunks."""
+    partitioned = []
+    for name in list(registry.names()):
+        obj = registry[name]
+        if should_partition(obj, fast_capacity):
+            chunk_bytes = max(1, fast_capacity // chunk_divisor)
+            chunks = partition_object(registry, name, chunk_bytes)
+            split_refs_to_chunks(graph, name, chunks)
+            partitioned.append(name)
+    return partitioned

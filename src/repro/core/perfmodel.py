@@ -1,0 +1,145 @@
+"""Unimem performance models — Eq. (1)-(5) of the paper, verbatim.
+
+* Eq. (1) consumed-bandwidth estimate for a (phase, object) pair
+* classification: bandwidth-sensitive (>= t1% of BW_peak), latency-sensitive
+  (< t2%), mixed otherwise (benefit = max of the two models)
+* Eq. (2) benefit for bandwidth-sensitive objects, with CF_bw
+* Eq. (3) benefit for latency-sensitive objects, with CF_lat
+* Eq. (4) movement cost with proactive overlap
+* Eq. (5) knapsack weight w = BFT - COST - extra_COST
+
+CF_bw / CF_lat are measured once per machine by running a STREAM-like and a
+pointer-chasing-like calibration workload (paper §3.1.2) — see
+:func:`calibrate` which runs them through the discrete-event simulator (the
+platform stand-in on a CPU-only container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .profiler import ObjectPhaseProfile
+from .tiers import MachineProfile
+
+T1_BANDWIDTH = 0.80   # paper: t1 = 80 (% of BW_peak)
+T2_LATENCY = 0.10     # paper: t2 = 10 (% of BW_peak)
+
+
+class Sensitivity(enum.Enum):
+    BANDWIDTH = "bandwidth"
+    LATENCY = "latency"
+    MIXED = "mixed"
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationConstants:
+    cf_bw: float = 1.0
+    cf_lat: float = 1.0
+
+
+# --------------------------------------------------------------------------
+# Eq. (1): BW_data_obj = (#data_access * cacheline) /
+#          ((#samples_with_access / #samples) * phase_time)
+# --------------------------------------------------------------------------
+def consumed_bandwidth(p: ObjectPhaseProfile, machine: MachineProfile) -> float:
+    frac = p.samples_with_access / max(p.n_samples, 1.0)
+    denom = frac * p.phase_time
+    if denom <= 0.0:
+        return 0.0
+    return (p.data_access * machine.cacheline_bytes) / denom
+
+
+def classify(p: ObjectPhaseProfile, machine: MachineProfile,
+             *, t1: float = T1_BANDWIDTH, t2: float = T2_LATENCY) -> Sensitivity:
+    bw = consumed_bandwidth(p, machine)
+    peak = machine.bw_peak
+    if bw >= t1 * peak:
+        return Sensitivity.BANDWIDTH
+    if bw < t2 * peak:
+        return Sensitivity.LATENCY
+    return Sensitivity.MIXED
+
+
+# --------------------------------------------------------------------------
+# Eq. (2): BFT_bw = (#acc*line/NVM_bw - #acc*line/DRAM_bw) * CF_bw
+# Eq. (3): BFT_lat = (#acc*NVM_lat - #acc*DRAM_lat) * CF_lat
+# --------------------------------------------------------------------------
+def benefit_bw(p: ObjectPhaseProfile, machine: MachineProfile,
+               cf: CalibrationConstants) -> float:
+    accessed = p.data_access * machine.cacheline_bytes
+    return (accessed / machine.slow.bw - accessed / machine.fast.bw) * cf.cf_bw
+
+
+def benefit_lat(p: ObjectPhaseProfile, machine: MachineProfile,
+                cf: CalibrationConstants) -> float:
+    return (p.data_access * machine.slow.lat
+            - p.data_access * machine.fast.lat) * cf.cf_lat
+
+
+def benefit(p: ObjectPhaseProfile, machine: MachineProfile,
+            cf: CalibrationConstants,
+            sensitivity: Optional[Sensitivity] = None) -> float:
+    """BFT_data_obj for moving the object slow->fast for this phase."""
+    s = sensitivity or classify(p, machine)
+    if s is Sensitivity.BANDWIDTH:
+        return benefit_bw(p, machine, cf)
+    if s is Sensitivity.LATENCY:
+        return benefit_lat(p, machine, cf)
+    return max(benefit_bw(p, machine, cf), benefit_lat(p, machine, cf))
+
+
+# --------------------------------------------------------------------------
+# Eq. (4): COST = max(size/copy_bw - mem_comp_overlap, 0)
+# --------------------------------------------------------------------------
+def movement_cost(size_bytes: float, machine: MachineProfile,
+                  overlap_window: float) -> float:
+    return max(size_bytes / machine.copy_bw - overlap_window, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Eq. (5): w = BFT - COST - extra_COST
+# --------------------------------------------------------------------------
+def weight(bft: float, cost: float, extra_cost: float = 0.0) -> float:
+    return bft - cost - extra_cost
+
+
+# --------------------------------------------------------------------------
+# CF calibration (paper §3.1.2): run a bandwidth-bound (STREAM-like) and a
+# latency-bound (pointer-chasing-like) workload; CF = measured / predicted.
+# --------------------------------------------------------------------------
+def calibrate(machine: MachineProfile, *, seed: int = 0) -> CalibrationConstants:
+    """Measure CF_bw / CF_lat against the discrete-event simulator.
+
+    Predicted time uses the same formulas the runtime will use online
+    (accessed_bytes / fast_bw and accesses x fast_lat, per the paper); the
+    "measured" time is the simulator executing the same access stream on the
+    fast tier.  The ratio absorbs sampling loss and overlap effects.
+    """
+    from ..sim.engine import simulate_stream_time, simulate_chase_time
+    from .profiler import PhaseProfiler
+    from .phase import PhaseTraceEvent
+
+    # ---- STREAM-like: touch 64 MiB sequentially on the fast tier ----------
+    n_bytes = 64 * 1024 * 1024
+    accesses = n_bytes / machine.cacheline_bytes
+    measured_bw_time = simulate_stream_time(machine, n_bytes, tier="fast")
+    prof = PhaseProfiler(machine, seed=seed)
+    prof.observe(PhaseTraceEvent(phase_index=0, time=measured_bw_time,
+                                 accesses={"stream": accesses}))
+    p = prof.profile(0, "stream")
+    predicted = (p.data_access * machine.cacheline_bytes) / machine.fast.bw
+    cf_bw = measured_bw_time / predicted if predicted > 0 else 1.0
+
+    # ---- pChase-like: dependent accesses, single chain ---------------------
+    n_chase = 1_000_000
+    measured_lat_time = simulate_chase_time(machine, n_chase, tier="fast")
+    prof2 = PhaseProfiler(machine, seed=seed + 1)
+    prof2.observe(PhaseTraceEvent(phase_index=0, time=measured_lat_time,
+                                  accesses={"chase": float(n_chase)}))
+    p2 = prof2.profile(0, "chase")
+    predicted_lat = p2.data_access * machine.fast.lat
+    cf_lat = measured_lat_time / predicted_lat if predicted_lat > 0 else 1.0
+
+    return CalibrationConstants(cf_bw=float(cf_bw), cf_lat=float(cf_lat))

@@ -1,0 +1,250 @@
+"""Data placement decision (paper §3.1.3).
+
+Two searches, both driven by Eq. (1)-(5) and solved as 0/1 knapsacks:
+
+* **phase-local search** — phases are decided one by one in order, with full
+  knowledge of what earlier decisions left resident in the fast tier.
+  Candidates are the objects the phase references; each candidate's weight is
+  ``w = BFT - COST - extra_COST`` where ``extra_COST`` prices evicting
+  just-big-enough non-candidate residents.  Moves are scheduled at the
+  earliest dependency-safe trigger point (Fig 5) so the proactive mover can
+  overlap them.
+* **cross-phase global search** — one knapsack over per-object benefit summed
+  across all phases; a single placement for the whole iteration, no
+  steady-state movement.
+
+The planner predicts the iteration time of each plan with the same models and
+keeps the better one (the paper's best-of-two).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+from . import knapsack, perfmodel
+from .data_objects import ObjectRegistry
+from .perfmodel import CalibrationConstants
+from .phase import PhaseGraph
+from .profiler import PhaseProfiler
+from .tiers import MachineProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveOp:
+    """One scheduled tier move.
+
+    ``trigger_phase`` may be negative: trigger in the *previous* iteration,
+    ``n + trigger_phase`` phases from its start.  ``est_unhidden_cost`` is the
+    Eq. (4) cost the model expects to remain on the critical path."""
+
+    obj: str
+    dst: str                     # "fast" | "slow"
+    trigger_phase: int
+    needed_by: int               # phase index whose start fences the move
+    size_bytes: int
+    est_unhidden_cost: float = 0.0
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    strategy: str                            # "local" | "global" | "none"
+    residents: List[Set[str]]                # per phase: fast-tier residents
+    moves: List[MoveOp]
+    predicted_iteration_time: float
+    baseline_iteration_time: float
+
+    def moves_for_phase(self, phase_index: int, n_phases: int) -> List[MoveOp]:
+        """Moves triggered at the start of ``phase_index`` (wrapping)."""
+        return [m for m in self.moves
+                if m.trigger_phase % n_phases == phase_index % n_phases]
+
+    def fences_for_phase(self, phase_index: int) -> List[MoveOp]:
+        return [m for m in self.moves if m.needed_by == phase_index]
+
+    @property
+    def total_moved_bytes(self) -> int:
+        return sum(m.size_bytes for m in self.moves)
+
+
+class Planner:
+    def __init__(self, machine: MachineProfile, registry: ObjectRegistry,
+                 cf: Optional[CalibrationConstants] = None,
+                 fast_capacity_bytes: Optional[int] = None):
+        self.machine = machine
+        self.registry = registry
+        self.cf = cf or CalibrationConstants()
+        self.capacity = (fast_capacity_bytes if fast_capacity_bytes is not None
+                         else machine.fast.capacity_bytes)
+
+    # ------------------------------------------------------------------ util
+    def _profile(self, profiler: PhaseProfiler, phase: int, obj: str):
+        p = profiler.profile(phase, obj)
+        if p is not None:
+            return p
+        # Chunk of a partitioned object: scale the parent's profile by the
+        # chunk's size fraction (regular 1-D references, paper §3.2).
+        dob = self.registry[obj] if obj in self.registry else None
+        if dob is not None and dob.parent is not None:
+            pp = profiler.profile(phase, dob.parent)
+            if pp is not None:
+                siblings = [o for o in self.registry if o.parent == dob.parent]
+                total = sum(s.size_bytes for s in siblings) or 1
+                frac = dob.size_bytes / total
+                return dataclasses.replace(
+                    pp, obj=obj, data_access=pp.data_access * frac,
+                    samples_with_access=max(pp.samples_with_access * frac, 1.0))
+        return None
+
+    def _benefit(self, profiler: PhaseProfiler, phase: int, obj: str) -> float:
+        p = self._profile(profiler, phase, obj)
+        if p is None:
+            return 0.0
+        return perfmodel.benefit(p, self.machine, self.cf)
+
+    def _initial_residents(self) -> Set[str]:
+        return {o.name for o in self.registry if o.tier == "fast"}
+
+    # ----------------------------------------------------------- local search
+    def plan_local(self, graph: PhaseGraph, profiler: PhaseProfiler) -> PlacementPlan:
+        n = len(graph)
+        residents: Set[str] = self._initial_residents()
+        originally_slow: Set[str] = {o.name for o in self.registry
+                                     if o.tier != "fast"}
+        placements: List[Set[str]] = []
+        moves: List[MoveOp] = []
+        size = lambda o: self.registry[o].size_bytes
+
+        for ph in graph:
+            cands = [o for o in ph.refs
+                     if o in self.registry
+                     and self._profile(profiler, ph.index, o) is not None
+                     and not self.registry[o].pinned]
+            free = self.capacity - sum(size(o) for o in residents)
+            items: List[knapsack.Item] = []
+            meta: Dict[str, Dict] = {}
+            for o in cands:
+                bft = self._benefit(profiler, ph.index, o)
+                if o in residents:
+                    # already resident: keeping it costs nothing
+                    items.append(knapsack.Item(o, bft, size(o)))
+                    meta[o] = dict(cost=0.0, extra=0.0, resident=True)
+                    continue
+                overlap = graph.overlap_window(o, ph.index)
+                cost = perfmodel.movement_cost(size(o), self.machine, overlap)
+                extra = 0.0
+                deficit = size(o) - free
+                if deficit > 0:
+                    # Space frees only when the evictee is dropped at this
+                    # phase's start -> the incoming copy cannot overlap
+                    # earlier phases (paper Fig 6: movement respects the
+                    # availability of DRAM space).
+                    cost = perfmodel.movement_cost(size(o), self.machine, 0.0)
+                    evictable = sorted(
+                        (r for r in residents
+                         if r not in ph.refs and not self.registry[r].pinned),
+                        key=size)
+                    got, evict_bytes = 0, 0
+                    for r in evictable:
+                        if got >= deficit:
+                            break
+                        got += size(r)
+                        evict_bytes += size(r)
+                    if got < deficit:
+                        continue   # cannot fit even with evictions
+                    extra = evict_bytes / self.machine.copy_bw
+                w = perfmodel.weight(bft, cost, extra)
+                items.append(knapsack.Item(o, w, size(o)))
+                meta[o] = dict(cost=cost, extra=extra, resident=False, bft=bft)
+
+            chosen = set(knapsack.solve(items, self.capacity))
+
+            # Enact: move chosen non-residents in, evicting just enough.
+            for o in sorted(chosen, key=size, reverse=True):
+                if o in residents:
+                    continue
+                needed_evict = False
+                deficit = size(o) - (self.capacity
+                                     - sum(size(r) for r in residents))
+                if deficit > 0:
+                    needed_evict = True
+                    evictable = sorted(
+                        (r for r in residents
+                         if r not in ph.refs and r not in chosen
+                         and not self.registry[r].pinned),
+                        key=size)
+                    freed = 0
+                    for r in evictable:
+                        if freed >= deficit:
+                            break
+                        residents.discard(r)
+                        freed += size(r)
+                        moves.append(MoveOp(r, "slow", ph.index, ph.index,
+                                            size(r),
+                                            size(r) / self.machine.copy_bw))
+                    if freed < deficit:
+                        continue  # still cannot fit; skip this object
+                # Eviction serializes with the incoming copy: trigger at the
+                # phase itself (space is only free then).
+                trig = (ph.index if needed_evict
+                        else graph.trigger_point(o, ph.index))
+                m = meta[o]
+                moves.append(MoveOp(o, "fast", trig, ph.index, size(o),
+                                    m["cost"]))
+                residents.add(o)
+            placements.append(set(residents))
+
+        # Predicted steady-state iteration time: baseline minus the realized
+        # per-phase benefits of everything resident (that profiling saw in
+        # the slow tier), plus the unhidden movement/eviction costs.
+        predicted = graph.iteration_time()
+        for ph in graph:
+            for o in placements[ph.index]:
+                if o in originally_slow:
+                    predicted -= self._benefit(profiler, ph.index, o)
+        predicted += sum(m.est_unhidden_cost for m in moves)
+        return PlacementPlan("local", placements, moves,
+                             max(predicted, 0.0), graph.iteration_time())
+
+    # ---------------------------------------------------------- global search
+    def plan_global(self, graph: PhaseGraph, profiler: PhaseProfiler) -> PlacementPlan:
+        n = len(graph)
+        size = lambda o: self.registry[o].size_bytes
+        objs = [o for o in graph.objects()
+                if o in self.registry and not self.registry[o].pinned]
+        items = []
+        for o in objs:
+            total_bft = sum(self._benefit(profiler, p.index, o) for p in graph)
+            items.append(knapsack.Item(o, total_bft, size(o)))
+        chosen = set(knapsack.solve(items, self.capacity))
+
+        moves: List[MoveOp] = []
+        predicted = graph.iteration_time()
+        residents0 = self._initial_residents()
+        originally_slow = {o.name for o in self.registry if o.tier != "fast"}
+        by = {it.name: it for it in items}
+        first_ref = {}
+        for p in graph:
+            for o in p.refs:
+                first_ref.setdefault(o, p.index)
+        for o in residents0 - chosen:
+            moves.append(MoveOp(o, "slow", 0, 0, size(o), 0.0))
+        for o in chosen:
+            if o in originally_slow:
+                predicted -= by[o].value
+            if o not in residents0:
+                # One-time move, dispatched at iteration start and fenced at
+                # the object's first use so it overlaps the leading phases
+                # (this is what makes the paper's Table-4 overlap percentages
+                # non-zero for global placements).
+                moves.append(MoveOp(o, "fast", 0, first_ref.get(o, 0),
+                                    size(o), 0.0))
+        placements = [set(chosen)] * n
+        return PlacementPlan("global", list(placements), moves,
+                             max(predicted, 0.0), graph.iteration_time())
+
+    # ----------------------------------------------------------- best of two
+    def plan(self, graph: PhaseGraph, profiler: PhaseProfiler) -> PlacementPlan:
+        local = self.plan_local(graph, profiler)
+        glob = self.plan_global(graph, profiler)
+        return local if local.predicted_iteration_time < glob.predicted_iteration_time else glob

@@ -1,0 +1,202 @@
+"""UnimemRuntime — the facade tying profiling, modeling, planning and
+proactive movement together (paper Fig 8 workflow, Table 2 API).
+
+Paper API mapping:
+
+=================  =========================================================
+unimem_init        ``UnimemRuntime(machine, ...)``
+unimem_malloc      ``rt.alloc(name, size_bytes | payload, chunkable=...)``
+unimem_start/end   ``rt.run_iteration(...)`` / ``rt.phase(...)`` contexts
+PMPI wrapper       phase boundaries are declared by the caller (collective /
+                   jit-step boundaries), exactly as PMPI interception does
+=================  =========================================================
+
+Workflow (paper §3.1): iteration 1 profiles each phase; at its end the
+planner builds a placement plan (best of phase-local / cross-phase-global);
+from iteration 2 on the proactive mover enforces the plan, and the variation
+monitor re-triggers profiling when a phase drifts >10%.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time as _time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from . import initial as initial_mod
+from . import partition as partition_mod
+from .data_objects import DataObject, ObjectRegistry
+from .monitor import VariationMonitor
+from .mover import JaxTierBackend, ProactiveMover, TierBackend
+from .perfmodel import CalibrationConstants
+from .phase import Phase, PhaseGraph, PhaseKind, PhaseTraceEvent
+from .planner import PlacementPlan, Planner
+from .profiler import PhaseProfiler
+from .tiers import MachineProfile
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    fast_capacity_bytes: Optional[int] = None   # default: machine.fast.capacity
+    enable_initial_placement: bool = True
+    enable_partitioning: bool = True
+    enable_local_search: bool = True
+    enable_global_search: bool = True
+    drift_threshold: float = 0.10
+    profile_iterations: int = 1
+    seed: int = 0
+
+
+class UnimemRuntime:
+    def __init__(self, machine: MachineProfile,
+                 config: Optional[RuntimeConfig] = None,
+                 backend: Optional[TierBackend] = None,
+                 cf: Optional[CalibrationConstants] = None):
+        self.machine = machine
+        self.config = config or RuntimeConfig()
+        self.registry = ObjectRegistry()
+        self.backend = backend or JaxTierBackend(machine)
+        self.cf = cf or CalibrationConstants()
+        self.capacity = (self.config.fast_capacity_bytes
+                         if self.config.fast_capacity_bytes is not None
+                         else machine.fast.capacity_bytes)
+        self.profiler = PhaseProfiler(machine, seed=self.config.seed)
+        self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
+        self.planner = Planner(machine, self.registry, self.cf, self.capacity)
+        self.mover: Optional[ProactiveMover] = None
+        self.plan: Optional[PlacementPlan] = None
+        self.graph: Optional[PhaseGraph] = None
+        self._phase_names: List[str] = []
+        self._iteration = 0
+        self._events_this_iter: List[PhaseTraceEvent] = []
+        self._profiling = True
+        self._baseline_pending = False
+        self._static_refs: Dict[str, float] = {}
+
+    # ------------------------------------------------------------- allocation
+    def alloc(self, name: str, *, size_bytes: Optional[int] = None,
+              payload: Any = None, chunkable: bool = False,
+              pinned: bool = False,
+              static_refs: Optional[float] = None) -> DataObject:
+        """``unimem_malloc``: register a target data object."""
+        if size_bytes is None:
+            if payload is None:
+                raise ValueError("need size_bytes or payload")
+            import jax
+            size_bytes = sum(l.size * l.dtype.itemsize
+                             for l in jax.tree_util.tree_leaves(payload))
+        obj = self.registry.alloc(name, int(size_bytes), chunkable=chunkable,
+                                  payload=payload, pinned=pinned)
+        if static_refs is not None:
+            self._static_refs[name] = static_refs
+        return obj
+
+    # ------------------------------------------------------------- main loop
+    def start_loop(self, phase_names: List[str],
+                   static_refs: Optional[Dict[str, float]] = None) -> None:
+        """``unimem_start``: declare the loop's phase structure."""
+        self._phase_names = list(phase_names)
+        self._static_refs.update(static_refs or {})
+        self._iteration = 0
+        self._profiling = True
+        self.graph = PhaseGraph([Phase(i, n) for i, n in enumerate(phase_names)])
+        self.mover = ProactiveMover(self.registry, self.backend)
+        if self.config.enable_initial_placement and self._static_refs:
+            placed = initial_mod.initial_placement(
+                self.registry, self._static_refs, self.capacity)
+            for name in placed:
+                self.backend.start_move(self.registry[name], "fast")
+
+    def begin_iteration(self) -> None:
+        self._events_this_iter = []
+
+    def phase_begin(self, index: int) -> float:
+        """Enter phase ``index``: fence + trigger proactive moves.  Returns the
+        fence stall in seconds (simulated backends) — real backends block and
+        return 0."""
+        if self.plan is not None and self.mover is not None:
+            return self.mover.on_phase_start(self.plan, index,
+                                             len(self._phase_names))
+        return 0.0
+
+    def phase_end(self, index: int, *, elapsed: float,
+                  accesses: Optional[Dict[str, float]] = None,
+                  time_shares: Optional[Dict[str, float]] = None) -> None:
+        """Leave phase ``index``.  ``accesses`` are the true per-object
+        main-memory access counts for this execution (the instrumentation the
+        paper gets from PEBS sampling)."""
+        ev = PhaseTraceEvent(phase_index=index, time=elapsed,
+                             accesses=dict(accesses or {}),
+                             time_shares=time_shares)
+        self._events_this_iter.append(ev)
+        if self._profiling:
+            self.profiler.observe(ev)
+        elif self._baseline_pending:
+            # First iteration after (re)planning: phase times now reflect the
+            # enacted placement — record them as the monitor baseline (the
+            # paper monitors performance *after* data movement).
+            self.monitor.set_baseline(index, elapsed)
+            if index == len(self._phase_names) - 1:
+                self._baseline_pending = False
+        else:
+            drift = self.monitor.observe(index, elapsed)
+            if drift is not None:
+                self._reprofile()
+
+    @contextlib.contextmanager
+    def phase(self, index: int, *, accesses: Optional[Dict[str, float]] = None):
+        """Context-manager wrapper over phase_begin/phase_end for real
+        (wall-clock) execution."""
+        self.phase_begin(index)
+        t0 = _time.perf_counter()
+        yield
+        self.phase_end(index, elapsed=_time.perf_counter() - t0,
+                       accesses=accesses)
+
+    def end_iteration(self) -> None:
+        self._iteration += 1
+        if self._profiling and self._iteration >= self.config.profile_iterations:
+            self._build_plan()
+            self._profiling = False
+
+    # ------------------------------------------------------------- internals
+    def _build_plan(self) -> None:
+        assert self.graph is not None
+        self.profiler.annotate_graph(self.graph)
+        if self.config.enable_partitioning:
+            partition_mod.auto_partition(self.registry, self.graph, self.capacity)
+        plans = []
+        if self.config.enable_local_search:
+            plans.append(self.planner.plan_local(self.graph, self.profiler))
+        if self.config.enable_global_search:
+            plans.append(self.planner.plan_global(self.graph, self.profiler))
+        if not plans:
+            self.plan = None
+            return
+        self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
+        self._baseline_pending = True
+        # Enact iteration-start moves for the global plan immediately.
+        if self.mover is not None:
+            self.mover.on_phase_start(self.plan, 0, len(self._phase_names))
+
+    def _reprofile(self) -> None:
+        self.profiler.clear()
+        self._profiling = True
+        self.plan = None
+        self._iteration = 0
+
+    # ------------------------------------------------------------- reporting
+    def stats(self) -> Dict[str, Any]:
+        mv = self.mover.stats if self.mover else None
+        return dict(
+            iteration=self._iteration,
+            strategy=self.plan.strategy if self.plan else None,
+            predicted_iteration_time=(self.plan.predicted_iteration_time
+                                      if self.plan else None),
+            n_moves=mv.n_moves if mv else 0,
+            moved_bytes=mv.moved_bytes if mv else 0,
+            overlap_fraction=mv.overlap_fraction if mv else None,
+            fast_resident_bytes=self.registry.bytes_in_tier("fast"),
+            n_objects=len(self.registry),
+        )

@@ -1,0 +1,236 @@
+"""Sharding rules: DP/FSDP x TP x EP x SP over the production mesh.
+
+Axis roles
+----------
+``("pod", "data")``  — data parallel + FSDP (ZeRO-3 parameter/optimizer
+                       sharding over the *full* DP extent)
+``"model"``          — tensor parallel (Megatron splits), expert parallel
+                       (MoE expert dim), and head-parallel KV caches
+sequence (SP)        — long-context caches shard their sequence dim over
+                       ``"data"`` when batch < DP extent (long_500k).
+
+Every rule passes through :func:`fit` which drops mesh axes that do not
+divide the corresponding dimension (e.g. gemma's 8 q-heads on a 16-way
+model axis shard the fused head*dim instead) — this is what makes all
+(arch x shape x mesh) cells compile without per-cell hand tuning.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# Flat-DP mode: small models waste the "model" axis on tensor parallelism
+# (every TP collective is pure overhead when a layer fits one chip).  When
+# enabled, the "model" axis joins the DP group and TP placements are
+# dropped — a perf-profile knob, not a default.
+_FLAT_DP = False
+
+
+def set_flat_dp(value: bool) -> None:
+    global _FLAT_DP
+    _FLAT_DP = value
+
+
+def flat_dp() -> bool:
+    return _FLAT_DP
+
+
+def mesh_axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def dp_axes(mesh: Mesh) -> AxisName:
+    base = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return base + ("model",) if _FLAT_DP else base
+
+
+def fit(mesh: Mesh, shape: Tuple[int, ...], *axes: AxisName) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    assert len(axes) == len(shape), (shape, axes)
+    if _FLAT_DP:
+        axes = tuple(None if ax == "model" else ax for ax in axes)
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        # keep the longest prefix of axes whose product divides dim
+        kept = []
+        prod = 1
+        for a in cand:
+            if a not in mesh.shape:
+                continue
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (path-regex -> axis roles per dimension, minus leading L)
+# ---------------------------------------------------------------------------
+def _param_axes(path: str, ndim: int, dp: AxisName, tied: bool = False):
+    """Returns per-dim axis roles for a (possibly L-stacked) parameter."""
+    # Embedding: d-sharded for untied archs (gather/scatter fully local per
+    # d-slice); vocab-sharded when the table doubles as the LM head (tied)
+    # so logits stay vocab-parallel.
+    embed_axes = ("model", None) if tied else (None, "model")
+    rules = [
+        # attention
+        (r"attn/w[qkv]$", (dp, "model")),
+        (r"attn/wo$", ("model", dp)),
+        (r"attn/b[qkv]$", ("model",)),
+        # dense mlp
+        (r"mlp/w_(gate|up)$", (dp, "model")),
+        (r"mlp/w_down$", ("model", dp)),
+        # shared experts
+        (r"moe/shared_(gate|up)$", (dp, "model")),
+        (r"moe/shared_down$", ("model", dp)),
+        # moe experts: EP on expert dim + FSDP inside
+        (r"moe/router$", (dp, None)),
+        (r"moe/w_(gate|up)$", ("model", dp, None)),
+        (r"moe/w_down$", ("model", None, dp)),
+        # mamba2
+        (r"in_proj$", (dp, "model")),
+        (r"out_proj$", ("model", dp)),
+        (r"conv_w$", (None, "model")),
+        (r"conv_b$", ("model",)),
+        (r"(a_log|dt_bias|d_skip)$", (None,)),
+        # xlstm
+        (r"o_gate$", (dp, "model")),
+        (r"w_gates$", (dp, "model")),
+        (r"r_gates$", (None, None, "model")),
+        # embeddings / head (see embed_axes above)
+        (r"embed$", embed_axes),
+        (r"head$", (None, "model")),
+        (r"frontend_proj$", (dp, "model")),
+        # norms and everything else small: replicated
+        (r".*", tuple([None] * ndim)),
+    ]
+    for pat, axes in rules:
+        if re.search(pat, path):
+            axes = tuple(axes)
+            if len(axes) < ndim:      # L-stacked: leading layer dim(s)
+                axes = tuple([None] * (ndim - len(axes))) + axes
+            return axes[:ndim]
+    raise AssertionError("unreachable")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(mesh: Mesh, params_shapes: Any, *,
+                tied: Optional[bool] = None) -> Any:
+    """PartitionSpecs for a params pytree (of ShapeDtypeStruct or arrays)."""
+    dp = dp_axes(mesh)
+    if tied is None:
+        tied = not any("head" in _path_str(p) for p, _ in
+                       jax.tree_util.tree_flatten_with_path(params_shapes)[0])
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        axes = _param_axes(_path_str(path), len(shape), dp, tied)
+        return fit(mesh, shape, *axes)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def opt_specs(mesh: Mesh, opt_shapes: Any, params_shapes: Any,
+              pspecs: Any) -> Any:
+    """Optimizer state mirrors parameter sharding (same-shape leaves)."""
+    flat_params = {l.shape: s for l, s in zip(
+        jax.tree_util.tree_leaves(params_shapes),
+        jax.tree_util.tree_leaves(pspecs))}
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape in flat_params:
+            return flat_params[leaf.shape]
+        # fallback (quantized moments etc.): FSDP on the largest dim
+        axes = [None] * leaf.ndim
+        axes[int(np.argmax(leaf.shape))] = dp
+        return fit(mesh, leaf.shape, *axes)
+
+    return jax.tree_util.tree_map_with_path(spec, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+def batch_specs(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    out = {"tokens": fit(mesh, (shape.global_batch, shape.seq_len), dp, None),
+           "labels": fit(mesh, (shape.global_batch, shape.seq_len), dp, None)}
+    if cfg.frontend:
+        out["frontend"] = fit(
+            mesh, (shape.global_batch, cfg.frontend_tokens, cfg.d_model),
+            dp, None, "model")
+    return out
+
+
+def cache_specs(mesh: Mesh, cfg: ArchConfig, cache_shapes: Any,
+                batch: int) -> Any:
+    """KV/state cache sharding.  Batch over DP when divisible; otherwise SP:
+    shard the sequence dim over "data" (long_500k, batch=1)."""
+    dp = dp_axes(mesh)
+    batch_ok = batch % mesh_axis_size(mesh, dp) == 0
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v)$", p):        # (L_or_apps, B, S, K, Dh)
+            if batch_ok:
+                s = fit(mesh, shape, None, dp, None, "model", None)
+                if s[3] is None:
+                    # few KV heads (MQA/GQA) cannot split 16-way: shard the
+                    # sequence instead (SP cache, flash-decoding style)
+                    s = fit(mesh, shape, None, dp, "model", None, None)
+                return s
+            return fit(mesh, shape, None, None, "data", "model", None)
+        if "conv" in p:                          # (L, B, W, C)
+            return fit(mesh, shape, None, dp if batch_ok else None,
+                       None, "model")
+        if "ssm" in p or "state" in p:           # (L, B, H, N, P)
+            return fit(mesh, shape, None, dp if batch_ok else None,
+                       "model", None, None)
+        if leaf.ndim >= 2:                       # slstm h/c/n/m: (L, B, H, P)
+            axes = [None] * leaf.ndim
+            if batch_ok and leaf.ndim >= 2:
+                axes[1] = dp
+            return fit(mesh, shape, *axes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

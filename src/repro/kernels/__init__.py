@@ -1,0 +1,17 @@
+"""Pallas TPU kernels (+ pure-jnp oracles in ref.py, wrappers in ops.py).
+
+flash_attention — causal GQA flash attention (train / prefill hot spot)
+decode_attention — one-token attention over long KV caches (decode shapes)
+tiered_matmul   — HBM->VMEM streamed matmul (the paper's proactive-mover
+                  pattern at the kernel memory level)
+ssd_scan        — Mamba-2 SSD chunked scan (zamba2 / long-context hot spot)
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+from .tiered_matmul import tiered_matmul
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention", "ssd_scan",
+           "tiered_matmul"]

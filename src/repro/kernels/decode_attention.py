@@ -1,0 +1,96 @@
+"""Single-token (decode) attention over a long KV cache — Pallas TPU kernel.
+
+The decode-shape hot spot: one query token per sequence attends to a KV
+cache of up to 512k positions.  Compute is negligible; the kernel is a
+bandwidth machine — performance is HBM-stream speed of K and V.  Grid
+(B, K, nk): the (G, D) query tile stays in VMEM while (bk, D) cache tiles
+stream through, with the same running-softmax scratch recurrence as the
+prefill kernel and masking past ``length``.
+
+Unimem note: tiles beyond ``length`` are skipped entirely (@pl.when), the
+kernel-level analogue of not migrating objects that a phase never
+references.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, bk: int, n_kv: int, scale: float):
+    ki = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * bk < length)        # skip tiles entirely past the length
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bk)
+        pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos >= length, NEG_INF, s)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, bk: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, D); k, v: (B, K, T, D); length: () int32 — number of
+    valid cache positions.  Returns (B, K, G, D)."""
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_decode_kernel, bk=bk, n_kv=nk, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, L: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, L: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)

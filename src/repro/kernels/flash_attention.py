@@ -1,0 +1,116 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Grid (B, K, nq, nk): one VMEM-resident (G*bq, D) query tile attends to
+streamed (bk, D) key/value tiles with the running-softmax (m, l, acc)
+recurrence; accumulators live in VMEM scratch and persist across the nk
+axis (sequentially innermost on TPU).
+
+Unimem mapping: the BlockSpec index maps are the *placement plan* (which
+HBM tile sits in VMEM at each grid step) and Mosaic's double-buffered grid
+pipeline is the *proactive mover* — the next KV tile streams HBM->VMEM while
+the current tile is being consumed, exactly the paper's helper-thread
+overlap, one memory level down.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, bq: int, bk: int, n_kv: int, causal: bool, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        G = q_ref.shape[2]
+        D = q_ref.shape[4]
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.reshape(G * bq, D), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (G*bq, bk)
+        if causal:
+            rows = jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0) % bq
+            cols = jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 1)
+            qpos = qi * bq + rows
+            kpos = ki * bk + cols
+            s = jnp.where(kpos > qpos, NEG_INF, s)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip fully-masked tiles (block-sparsity of the causal mask)
+        @pl.when(ki * bk <= qi * bq + bq - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        G = o_ref.shape[2]
+        D = o_ref.shape[4]
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = out.reshape(G, bq, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, S, D); k, v: (B, K, T, D).  Returns (B, K, G, S, D).
+
+    S must be a multiple of bq and T of bk (ops.py pads)."""
+    B, K, G, S, D = q.shape
+    T = k.shape[2]
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, n_kv=nk,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+            pltpu.VMEM((G * bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Dispatch policy: Pallas kernels on TPU, pure-jnp oracles elsewhere
+(CPU/interpret is for tests only — ``interpret=True`` executes the kernel
+body in Python).  Wrappers handle padding to block multiples so callers can
+pass arbitrary shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+from .tiered_matmul import tiered_matmul as _mm_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    force_pallas: Optional[bool] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, S, D); k, v: (B, K, T, D)."""
+    use_pallas = force_pallas if force_pallas is not None else on_tpu()
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    S, T = q.shape[3], k.shape[2]
+    qp = _pad_to(q, 3, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    # padded KV columns must not win the softmax: causal masking handles the
+    # tail since padded q rows are discarded and kpos > qpos there.
+    out = _flash_pallas(qp, kp, vp, causal=causal, bq=bq, bk=bk,
+                        interpret=interpret)
+    return out[:, :, :, :S]
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length, *, bk: int = 512,
+                     force_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, D); k, v: (B, K, T, D); length: valid cache positions."""
+    use_pallas = force_pallas if force_pallas is not None else on_tpu()
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, length)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    return _decode_pallas(q, kp, vp, length, bk=bk, interpret=interpret)
+
+
+def tiered_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256,
+                  bn: int = 256, bk: int = 512,
+                  force_pallas: Optional[bool] = None,
+                  interpret: bool = False) -> jax.Array:
+    M, N = x.shape[0], w.shape[1]
+    use_pallas = force_pallas if force_pallas is not None else on_tpu()
+    if not use_pallas:
+        return ref.tiered_matmul_ref(x, w)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    return _mm_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)[:M, :N]
+
+
+def ssd_scan(a: jax.Array, k: jax.Array, v: jax.Array, q: jax.Array, *,
+             chunk: int = 256, force_pallas: Optional[bool] = None,
+             interpret: bool = False) -> jax.Array:
+    use_pallas = force_pallas if force_pallas is not None else on_tpu()
+    if not use_pallas:
+        return ref.ssd_scan_ref(a, k, v, q)
+    S = a.shape[2]
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = _ssd_pallas(a, k, v, q, chunk=chunk, interpret=interpret)
+    return out[:, :, :S]

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately naive: full score matrices, step-by-step recurrences, fp32
+everywhere.  Tests sweep shapes/dtypes and assert the kernels (interpret
+mode on CPU) match these within tolerance.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, K, G, S, D); k, v: (B, K, T, D) -> (B, K, G, S, D)."""
+    B, K, G, S, D = q.shape
+    T = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(T)[None, :] > jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: int) -> jax.Array:
+    """q: (B, K, G, D); k, v: (B, K, T, D) -> (B, K, G, D)."""
+    D = q.shape[-1]
+    T = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = jnp.where((jnp.arange(T) >= length)[None, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,bktd->bkgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def tiered_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan_ref(a: jax.Array, k: jax.Array, v: jax.Array, q: jax.Array
+                 ) -> jax.Array:
+    """Step-by-step SSD recurrence.  a: (B,H,S); k,q: (B,H,S,N); v: (B,H,S,P)."""
+    B, H, S = a.shape
+    N, P = k.shape[-1], v.shape[-1]
+
+    def step(state, inp):
+        a_t, k_t, v_t, q_t = inp
+        state = state * a_t[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", k_t, v_t)
+        y = jnp.einsum("bhnp,bhn->bhp", state, q_t)
+        return state, y
+
+    init = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(a, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(q, 2, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(v.dtype)

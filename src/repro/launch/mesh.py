@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches JAX device state — the dry-run must set
+``xla_force_host_platform_device_count`` before any device query.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices this host exposes (tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    devs = jax.devices()[: data * model]
+    import numpy as np
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))

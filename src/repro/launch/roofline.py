@@ -1,0 +1,235 @@
+"""Roofline analysis per (arch x shape) on the single-pod mesh.
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``lax.scan`` body once
+(and unrolls length-1 scans), so loop-heavy programs (layer scans, flash
+q/kv tile loops, microbatch loops) cannot be totalled from the compiled
+artifact alone — L1/L2 probe extrapolation produces negative per-layer
+deltas.  The three roofline terms are therefore derived analytically from
+the architecture/shape/parallelism (the standard napkin model), while the
+compiled dry-run supplies the *validation* side: memory_analysis (fit
+proof), the collective op census (which collectives, how many, what shapes)
+and the per-body cost sanity checks recorded in EXPERIMENTS.md.
+
+Terms (per chip, per step):
+  compute_s    = FLOPs / 197e12          (dense 6ND train / 2ND inference,
+                                          N_active for MoE, + exact causal
+                                          attention term, x3 for backward,
+                                          +1 fwd repeat when remat)
+  memory_s     = HBM bytes / 819e9       (weight passes + activation
+                                          traffic + optimizer state + KV)
+  collective_s = ici bytes / 50e9        (FSDP all-gather + grad
+                                          reduce-scatter + TP activation
+                                          ARs + EP all-to-all + logits AR;
+                                          AR costs 2x its payload)
+
+  PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.tiers import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS_BF16
+
+CHIPS, DP, TP = 256, 16, 16
+
+
+def attention_flops_fwd(cfg: ArchConfig, B: int, S: int, cache: int = 0
+                        ) -> float:
+    """Causal attention matmul FLOPs, forward, all layers."""
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    if cfg.block_pattern == "mamba_shared_attn":
+        n_attn = -(-cfg.n_layers // cfg.attn_every)
+    elif cfg.block_pattern == "xlstm":
+        n_attn = 0
+    else:
+        n_attn = cfg.n_layers
+    if cache:                       # decode: 1 token vs cache
+        return n_attn * 4.0 * B * H * Dh * cache
+    return n_attn * 2.0 * B * S * S * H * Dh      # causal half of 4BSSHD
+
+
+def ssm_flops_fwd(cfg: ArchConfig, tokens: float) -> float:
+    """Linear-recurrence extra FLOPs (state updates), forward."""
+    if cfg.block_pattern == "mamba_shared_attn":
+        d_in = cfg.ssm_expand * cfg.d_model
+        return cfg.n_layers * 6.0 * tokens * d_in * cfg.ssm_state
+    if cfg.block_pattern == "xlstm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        P = d_in // cfg.n_heads
+        return cfg.n_layers * 4.0 * tokens * d_in * P
+    return 0.0
+
+
+def analytic_terms(cfg: ArchConfig, shape: ShapeConfig, r: Dict) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.n_active_params()
+    N_total = cfg.n_params()
+    mb = r.get("microbatches") or 1
+    offload = r.get("mode") == "offload-grads"
+    kv_bytes = 1 if "float8" in str(r.get("kv_dtype", "")) else 2
+
+    if shape.kind == "train":
+        tokens = B * S
+        flops = (6.0 * N * tokens
+                 + 3.0 * (attention_flops_fwd(cfg, B, S)
+                          + ssm_flops_fwd(cfg, tokens)))
+        flops *= 4.0 / 3.0          # remat: one extra forward
+        # HBM: weights 3 passes (fwd+bwd read, write) in bf16 + optimizer
+        # r/w fp32 (unless offloaded) + activation boundary traffic x2
+        w_traffic = 3 * 2 * N_total
+        opt_traffic = 0 if offload else 2 * 12 * N_total
+        act = 2 * 2 * tokens * cfg.d_model * cfg.n_layers / TP
+        hbm = w_traffic / CHIPS + opt_traffic / CHIPS + act / DP
+        # ICI: FSDP all-gather weights (fwd+bwd) over dp of the tp-shard +
+        # grad reduce-scatter + 2 TP ARs per layer on activations (x2 for AR)
+        ag = 2 * mb * 2 * N_total / TP
+        rs = 2 * N_total / TP
+        tp_ar = 2 * 2 * 2 * (tokens / DP) * cfg.d_model * cfg.n_layers
+        a2a = (2 * 2 * tokens * cfg.moe_top_k * cfg.d_model / CHIPS
+               if cfg.is_moe else 0.0)
+        ici = ag + rs + tp_ar / 1e0 + a2a
+        coll = {"all-gather": ag, "reduce-scatter": rs,
+                "all-reduce(x2)": tp_ar, "all-to-all": a2a}
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = (2.0 * N * tokens + attention_flops_fwd(cfg, B, S)
+                 + ssm_flops_fwd(cfg, tokens))
+        hbm = (2 * N_total / CHIPS
+               + 2 * tokens * cfg.d_model * cfg.n_layers / DP / TP)
+        ag = 2 * N_total / TP
+        tp_ar = 2 * 2 * (tokens / DP) * cfg.d_model * cfg.n_layers
+        a2a = (2 * tokens * cfg.moe_top_k * cfg.d_model / CHIPS
+               if cfg.is_moe else 0.0)
+        ici = ag + tp_ar + a2a
+        coll = {"all-gather": ag, "all-reduce(x2)": tp_ar, "all-to-all": a2a}
+    else:                            # decode: one token, cache of length S
+        tokens = B
+        flops = (2.0 * N * tokens + attention_flops_fwd(cfg, B, S, cache=S)
+                 + ssm_flops_fwd(cfg, tokens))
+        cache_gib = r["memory"]["argument_bytes"] - 2 * N_total / CHIPS
+        K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        if cfg.block_pattern == "attn":
+            cache_bytes = 2 * cfg.n_layers * B * S * K * Dh * kv_bytes
+        elif cfg.block_pattern == "mamba_shared_attn":
+            n_apps = -(-cfg.n_layers // cfg.attn_every)
+            d_in = cfg.ssm_expand * cfg.d_model
+            cache_bytes = (2 * n_apps * B * S * K * Dh * kv_bytes
+                           + cfg.n_layers * B * (d_in // cfg.ssm_head_dim)
+                           * cfg.ssm_state * cfg.ssm_head_dim * 4)
+        else:
+            d_in = cfg.ssm_expand * cfg.d_model
+            P = d_in // cfg.n_heads
+            cache_bytes = cfg.n_layers * B * cfg.n_heads * P * (P + 1) * 4
+        hbm = (2 * N_total + cache_bytes) / CHIPS
+        tp_ar = 2 * 2 * (tokens / max(1, min(DP, B))) * cfg.d_model \
+            * cfg.n_layers
+        ici = tp_ar
+        coll = {"all-reduce(x2)": tp_ar}
+
+    return {
+        "flops_per_chip": flops / CHIPS,
+        "hbm_bytes_per_chip": hbm,
+        "ici_bytes_per_chip": ici,
+        "collectives": coll,
+        "compute_s": flops / CHIPS / V5E_PEAK_FLOPS_BF16,
+        "memory_s": hbm / V5E_HBM_BW,
+        "collective_s": ici / V5E_ICI_BW,
+    }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(r: Dict) -> Dict:
+    arch, shape_name, _ = r["cell"].split("|")
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t = analytic_terms(cfg, shape, r)
+    terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+             "collective": t["collective_s"]}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape) / CHIPS
+    # roofline fraction: useful-work time of the *ideal* program (max of
+    # pure-compute and minimal-traffic bounds) over this program's bound
+    ideal_mem = ((2 * cfg.n_params() / CHIPS) / V5E_HBM_BW
+                 if shape.kind == "decode" else 0.0)
+    ideal = max(mf / V5E_PEAK_FLOPS_BF16,
+                ideal_mem if shape.kind == "decode" else 0.0,
+                t["memory_s"] if shape.kind == "decode" else 0.0)
+    frac = ideal / bound if bound else 0.0
+    return {
+        "cell": r["cell"], "arch": arch, "shape": shape_name,
+        "mode": r.get("mode"), "microbatches": r.get("microbatches"),
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"], "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_ratio": mf / t["flops_per_chip"],
+        "roofline_fraction": frac,
+        "step_bound_s": bound,
+        "peak_gib": r["memory"]["peak_bytes"] / 2 ** 30,
+        "fits": r.get("fits_hbm"),
+        "hlo_collectives": {k: v["count"]
+                            for k, v in r.get("collectives_raw", {}).items()
+                            if v["count"]},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv", default="experiments/roofline.csv")
+    args = ap.parse_args()
+
+    rows: List[Dict] = []
+    for fn in sorted(glob.glob(os.path.join(args.dir, "*16x16.json"))):
+        r = json.load(open(fn))
+        if r.get("status") != "ok":
+            rows.append({"cell": r["cell"],
+                         "skip": r.get("reason", r.get("error"))})
+            continue
+        rows.append(analyze(r))
+
+    cols = ["cell", "mode", "microbatches", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops_per_chip",
+            "hlo_flops_ratio", "roofline_fraction", "step_bound_s",
+            "peak_gib", "fits"]
+    os.makedirs(os.path.dirname(args.csv), exist_ok=True)
+    with open(args.csv, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for row in rows:
+            if "skip" in row:
+                f.write(f"{row['cell']},SKIPPED\n")
+                continue
+            f.write(",".join(
+                f"{row[c]:.6g}" if isinstance(row[c], float) else str(row[c])
+                for c in cols) + "\n")
+    print(f"wrote {args.csv}")
+    for row in rows:
+        if "skip" in row:
+            print(f"{row['cell']:52s} SKIP ({row['skip'][:48]})")
+            continue
+        print(f"{row['cell']:52s} dom={row['dominant']:10s} "
+              f"C={row['compute_s'] * 1e3:9.2f}ms "
+              f"M={row['memory_s'] * 1e3:8.2f}ms "
+              f"X={row['collective_s'] * 1e3:8.2f}ms "
+              f"frac={row['roofline_fraction'] * 100:5.1f}% "
+              f"peak={row['peak_gib']:5.2f}GiB "
+              f"hlo_colls={row['hlo_collectives']}")
+
+
+if __name__ == "__main__":
+    main()

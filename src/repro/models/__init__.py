@@ -1,0 +1,5 @@
+"""Model zoo: shared layers + LM assembly for the 10 assigned archs."""
+
+from . import attention, common, lm, mamba2, mlp, moe, xlstm
+
+__all__ = ["attention", "common", "lm", "mamba2", "mlp", "moe", "xlstm"]

@@ -1,0 +1,37 @@
+"""MLP variants: SwiGLU / GeGLU (gated) and plain 2-layer (GELU / squared-ReLU)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ACTIVATIONS, dense_init, split_keys
+
+
+def init_mlp_params(key: jax.Array, cfg: ArchConfig, d_ff: int = 0,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d, f), dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype),
+            "w_down": dense_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), dtype),
+        "w_down": dense_init(ks[1], (f, d), dtype),
+    }
+
+
+def mlp_forward(params: Dict[str, jax.Array], x: jax.Array,
+                cfg: ArchConfig) -> jax.Array:
+    act = ACTIVATIONS[cfg.activation]
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return (act(x @ params["w_gate"]) * (x @ params["w_up"])) \
+            @ params["w_down"]
+    return act(x @ params["w_up"]) @ params["w_down"]

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+GShard-style dispatch implemented scatter/gather-style (no (T, E, C) one-hot
+einsum): assignment positions come from a one-hot cumsum, tokens above
+capacity are dropped (capacity_factor controls slack), combine weights are
+the renormalized top-k gates.  Shared experts (DeepSeek/Moonlight style) run
+densely alongside.
+
+Sharding: expert-stacked weights (E, d, f) shard E over the ``model`` axis
+(expert parallelism); the dispatch buffer (E, C, d) shards E over ``model``
+and C over ``data`` so XLA lowers the token exchange to all-to-all-like
+collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ACTIVATIONS, dense_init, shard_hint, split_keys
+
+
+def init_moe_params(key: jax.Array, cfg: ArchConfig,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d, E, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if cfg.moe_shared_experts:
+        fs = f * cfg.moe_shared_experts
+        ks2 = split_keys(ks[4], 3)
+        p["shared_gate"] = dense_init(ks2[0], (d, fs), dtype)
+        p["shared_up"] = dense_init(ks2[1], (d, fs), dtype)
+        p["shared_down"] = dense_init(ks2[2], (fs, d), dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.moe_top_k / cfg.moe_experts
+            * cfg.moe_capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_forward(params: Dict[str, jax.Array], x: jax.Array,
+                cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: (B, S, d).
+
+    Dispatch is *group-local* (GShard): each batch row dispatches its own
+    tokens with row-local capacity, so every dispatch buffer keeps a leading
+    batch dim — scatters/gathers stay batched (dp-sharded) and the expert
+    dim shards over "model" (EP); XLA lowers the (dp x model) resharding of
+    the (B, E, C, d) buffer to the expert all-to-all.
+
+    Long sequences run the dispatch *sequentially* over <=4096-token chunks
+    (``lax.map``) so the (tokens*k, d) gather/scatter tensors stay bounded
+    — chunked-prefill MoE; capacity is per 4k window, standard practice."""
+    B0, S0, d = x.shape
+    SC = 4096
+    if S0 > SC and S0 % SC == 0:
+        nc = S0 // SC
+        xs = jnp.swapaxes(x.reshape(B0, nc, SC, d), 0, 1)   # (nc, B, SC, d)
+        outs, auxs = jax.lax.map(
+            lambda xc: _moe_core(params, xc, cfg), xs)
+        out = jnp.swapaxes(outs, 0, 1).reshape(B0, S0, d)
+        return out, auxs.mean()
+    return _moe_core(params, x, cfg)
+
+
+def _moe_core(params: Dict[str, jax.Array], x: jax.Array,
+              cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    act = ACTIVATIONS[cfg.activation]
+
+    logits = x.astype(jnp.float32) @ params["router"]           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                        # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * mean(frac_tokens * frac_prob)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    C = _capacity(S, cfg)                       # row-local capacity
+    flat_e = idx.reshape(B, S * k)
+
+    def dispatch_row(xrow, erow):
+        """xrow: (S, d); erow: (S*k,) -> (E, C, d), pos, keep.
+
+        Positions within each expert come from an argsort rank (O(S*k)
+        memory) instead of a one-hot cumsum (O(S*k*E))."""
+        order = jnp.argsort(erow)                   # stable
+        rank = jnp.argsort(order)
+        counts = jnp.bincount(erow, length=E)
+        start = jnp.cumsum(counts) - counts
+        pos = rank - start[erow]
+        keep = pos < C
+        pos_c = jnp.minimum(pos, C - 1)
+        contrib = jnp.repeat(xrow, k, axis=0) \
+            * keep[:, None].astype(xrow.dtype)
+        buf = jnp.zeros((E, C, d), xrow.dtype).at[erow, pos_c].add(contrib)
+        return buf, pos_c, keep
+
+    buf, pos_c, keep = jax.vmap(dispatch_row)(x, flat_e)
+    buf = shard_hint(buf, "dp", "model", None, None)   # EP all-to-all here
+    h = (act(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+         * jnp.einsum("becd,edf->becf", buf, params["w_up"]))
+    h = shard_hint(h, "dp", "model", None, None)
+    h = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    h = shard_hint(h, "dp", "model", None, None)
+
+    def combine_row(hrow, erow, prow, krow, grow):
+        picked = hrow[erow, prow]                              # (S*k, d)
+        picked = picked * (grow.reshape(-1, 1)
+                           * krow[:, None]).astype(hrow.dtype)
+        tok = jnp.arange(S * k) // k
+        return jnp.zeros((S, d), hrow.dtype).at[tok].add(picked)
+
+    out = jax.vmap(combine_row)(h, flat_e, pos_c, keep,
+                                gates.reshape(B, S * k))
+    out = shard_hint(out, "dp", None, "model")
+
+    if cfg.moe_shared_experts:
+        out = out + (act(x @ params["shared_gate"])
+                     * (x @ params["shared_up"])) @ params["shared_down"]
+    return out, aux

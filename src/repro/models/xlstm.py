@@ -1,0 +1,168 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) [arXiv:2405.04517].
+
+mLSTM is driven by the shared chunked linear-recurrence engine from
+``repro.models.mamba2``:  C_t = f_t C_{t-1} + i_t v_t k_t^T  with the
+normalizer n_t = f_t n_{t-1} + i_t k_t computed by appending a ones-column
+to v (state width P+1).  Gates use the exponential-gating stabilization of
+the paper folded into per-step decays.
+
+sLSTM keeps per-head scalar memories and is inherently sequential: a
+``lax.scan`` over time with block-diagonal recurrent weights.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, rms_norm, split_keys
+from .mamba2 import chunked_linear_scan, linear_scan_step
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm_params(key: jax.Array, cfg: ArchConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.n_heads
+    ks = split_keys(key, 3)
+    return {
+        # q, k, v over the up-projected stream + i, f gates per head
+        "in_proj": dense_init(ks[0], (d, 3 * d_in + 2 * H), dtype),
+        "o_gate": dense_init(ks[1], (d, d_in), dtype),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _mlstm_qkv(params, x, cfg):
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.n_heads
+    P = d_in // H
+    proj = x @ params["in_proj"]
+    q = proj[..., :d_in].reshape(B, S, H, P)
+    k = proj[..., d_in:2 * d_in].reshape(B, S, H, P) / jnp.sqrt(P)
+    v = proj[..., 2 * d_in:3 * d_in].reshape(B, S, H, P)
+    ig = proj[..., 3 * d_in:3 * d_in + H].astype(jnp.float32)
+    fg = proj[..., 3 * d_in + H:].astype(jnp.float32)
+    return q, k, v, ig, fg, d_in, H, P
+
+
+def mlstm_forward(params: Dict[str, jax.Array], x: jax.Array,
+                  cfg: ArchConfig, *, chunk: int = 256) -> jax.Array:
+    B, S, d = x.shape
+    q, k, v, ig, fg, d_in, H, P = _mlstm_qkv(params, x, cfg)
+    f = jax.nn.sigmoid(fg)                           # per-step decay (B,S,H)
+    i = jnp.exp(ig - jax.nn.softplus(ig))            # stabilized input gate
+    # state update: C = f*C + (i*v) k^T ; normalizer via ones column on v
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32) * i[..., None],
+         i[..., None] * jnp.ones((B, S, H, 1), jnp.float32)], axis=-1)
+    y, _ = chunked_linear_scan(f, k, v_aug, q, chunk=chunk)
+    num, den = y[..., :P], y[..., P:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, S, d_in).astype(x.dtype)
+    h = rms_norm(h, params["norm"]) * jax.nn.sigmoid(x @ params["o_gate"])
+    return h @ params["out_proj"]
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_in // H
+    return {"state": jnp.zeros((batch, H, P, P + 1), jnp.float32)}
+
+
+def mlstm_decode(params: Dict[str, jax.Array], x: jax.Array, cache: Dict,
+                 cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    q, k, v, ig, fg, d_in, H, P = _mlstm_qkv(params, x, cfg)
+    f = jax.nn.sigmoid(fg[:, 0])
+    i = jnp.exp(ig[:, 0] - jax.nn.softplus(ig[:, 0]))
+    v_aug = jnp.concatenate(
+        [v[:, 0].astype(jnp.float32) * i[..., None],
+         i[..., None] * jnp.ones((B, H, 1), jnp.float32)], axis=-1)
+    y, new_state = linear_scan_step(cache["state"], f, k[:, 0], v_aug, q[:, 0])
+    num, den = y[..., :P], y[..., P:]
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, 1, d_in)
+    h = h.astype(x.dtype)
+    h = rms_norm(h, params["norm"]) * jax.nn.sigmoid(x @ params["o_gate"])
+    return h @ params["out_proj"], {"state": new_state}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm_params(key: jax.Array, cfg: ArchConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    ks = split_keys(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype),     # z, i, f, o
+        "r_gates": dense_init(ks[1], (H, P, 4 * P), dtype),  # block-diag rec
+        "norm": jnp.zeros((d,), dtype),
+        "out_proj": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_cell(params, carry, gates_t, H, P):
+    """One sLSTM step.  gates_t: (B, 4d) pre-activations from the input."""
+    h, c, n, m = carry                                  # (B, H, P) each / m: (B,H,P)
+    rec = jnp.einsum("bhp,hpq->bhq", h, params["r_gates"].astype(jnp.float32))
+    g = gates_t.reshape(gates_t.shape[0], H, 4 * P).astype(jnp.float32) + rec
+    z = jnp.tanh(g[..., :P])
+    i_t = g[..., P:2 * P]
+    f_t = g[..., 2 * P:3 * P]
+    o = jax.nn.sigmoid(g[..., 3 * P:])
+    # exponential gating with stabilizer state m
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_e = jnp.exp(i_t - m_new)
+    f_e = jnp.exp(f_t + m - m_new)
+    c_new = f_e * c + i_e * z
+    n_new = f_e * n + i_e
+    h_new = o * (c_new / jnp.maximum(jnp.abs(n_new), 1.0))
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params: Dict[str, jax.Array], x: jax.Array,
+                  cfg: ArchConfig) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    P = d // H
+    gates = x @ params["w_gates"]                        # (B, S, 4d)
+    zeros = jnp.zeros((B, H, P), jnp.float32)
+    carry0 = (zeros, zeros, zeros, zeros)
+
+    def step(carry, g_t):
+        new = _slstm_cell(params, carry, g_t, H, P)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(gates, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, params["norm"])
+    return h @ params["out_proj"]
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode(params: Dict[str, jax.Array], x: jax.Array, cache: Dict,
+                 cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    gates = (x @ params["w_gates"])[:, 0]
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(params, carry, gates, H, P)
+    out = h.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    out = rms_norm(out, params["norm"]) @ params["out_proj"]
+    return out, {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, init_opt_state, adamw_update,
+                    opt_state_bytes)
+from .schedule import cosine_schedule
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update",
+           "opt_state_bytes", "cosine_schedule"]

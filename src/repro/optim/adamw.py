@@ -1,0 +1,149 @@
+"""AdamW with a fp32 master copy and optional 8-bit quantized moments.
+
+The optimizer state is the canonical Unimem offload victim (touched once per
+step, 12-16 bytes/param in fp32): the runtime places it on the host tier for
+HBM-constrained architectures.  The 8-bit moment option (block-wise scaled,
+error preserved in the scale) is the in-HBM alternative the perf loop
+compares against — a beyond-paper optimization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True
+    moments_dtype: str = "float32"     # "float32" | "bfloat16" | "int8"
+    quant_block: int = 256
+
+
+# ------------------------------------------------------------- int8 moments
+def _quant(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+# ----------------------------------------------------------------- opt state
+def init_opt_state(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    def zeros_like_moment(p):
+        if cfg.moments_dtype == "int8":
+            q, s = _quant(jnp.zeros(p.shape, jnp.float32), cfg.quant_block)
+            return {"q": q, "s": s}
+        dt = jnp.bfloat16 if cfg.moments_dtype == "bfloat16" else jnp.float32
+        return jnp.zeros(p.shape, dt)
+
+    state = {
+        "mu": jax.tree_util.tree_map(zeros_like_moment, params),
+        "nu": jax.tree_util.tree_map(zeros_like_moment, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _read_moment(m, shape, cfg: AdamWConfig) -> jax.Array:
+    if isinstance(m, dict):
+        return _dequant(m["q"], m["s"], shape)
+    return m.astype(jnp.float32)
+
+
+def _write_moment(val: jax.Array, cfg: AdamWConfig):
+    if cfg.moments_dtype == "int8":
+        q, s = _quant(val, cfg.quant_block)
+        return {"q": q, "s": s}
+    dt = jnp.bfloat16 if cfg.moments_dtype == "bfloat16" else jnp.float32
+    return val.astype(dt)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads: Any, params: Any, state: Dict[str, Any],
+                 cfg: AdamWConfig, lr: jax.Array
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(g, p, mu, nu, master):
+        g = g.astype(jnp.float32) * clip
+        m = _read_moment(mu, g.shape, cfg)
+        v = _read_moment(nu, g.shape, cfg)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        base = master.astype(jnp.float32)
+        new_master = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        return new_master, _write_moment(m, cfg), _write_moment(v, cfg)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(masters)
+
+    out = [upd(g, p, mu, nu, ma) for g, p, mu, nu, ma in
+           zip(flat_g, flat_p, flat_mu, flat_nu, flat_ma)]
+    new_masters = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda m, p: m.astype(p.dtype), new_masters, params)
+
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    if cfg.master_fp32:
+        new_state["master"] = new_masters
+    return new_params, new_state, {"grad_norm": gnorm,
+                                   "step": step.astype(jnp.float32)}
+
+
+def opt_state_bytes(params: Any, cfg: AdamWConfig) -> int:
+    n = sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+    per = 0
+    per += 4 if cfg.master_fp32 else 0
+    if cfg.moments_dtype == "int8":
+        per += 2 * (1 + 4 / cfg.quant_block)
+    elif cfg.moments_dtype == "bfloat16":
+        per += 4
+    else:
+        per += 8
+    return int(n * per)

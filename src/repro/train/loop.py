@@ -1,0 +1,121 @@
+"""Training loop with the Unimem runtime in charge of tier placement.
+
+Per-step phases (the paper's MPI-delimited phases, here jit/collective
+boundaries): data fetch -> train_step -> (periodically) checkpoint.  The
+Unimem runtime profiles the first iteration(s), plans placement for the
+registered data objects (optimizer-state groups, checkpoint staging
+buffers), and proactively moves them between HBM and host; the drift
+monitor doubles as the straggler detector and triggers re-planning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs.base import ArchConfig
+from ..core import RuntimeConfig, UnimemRuntime
+from ..core.tiers import TPU_V5E, MachineProfile
+from ..data import DataConfig, SyntheticTokenPipeline
+from ..models import lm
+from ..models.common import tree_bytes
+from ..optim import AdamWConfig, init_opt_state
+from .step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    microbatches: int = 1
+    remat: bool = True
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    machine: MachineProfile = dataclasses.field(default_factory=lambda: TPU_V5E)
+    use_unimem: bool = True
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    step_times: list
+    final_step: int
+    runtime_stats: Dict[str, Any]
+
+
+def train(cfg: ArchConfig, tcfg: TrainConfig,
+          opt_cfg: Optional[AdamWConfig] = None) -> TrainResult:
+    opt_cfg = opt_cfg or AdamWConfig()
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = lm.init_params(cfg, key)
+    opt_state = init_opt_state(params, opt_cfg)
+    data = SyntheticTokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+        global_batch=tcfg.global_batch, seed=tcfg.seed))
+    step_fn = jax.jit(build_train_step(
+        cfg, opt_cfg, microbatches=tcfg.microbatches, remat=tcfg.remat,
+        lr=tcfg.lr), donate_argnums=(0, 1))
+
+    ckpt = (CheckpointManager(tcfg.checkpoint_dir)
+            if tcfg.checkpoint_dir else None)
+    start_step = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        start_step, state = ckpt.restore()
+        params, opt_state = state["params"], state["opt"]
+
+    # ---- Unimem runtime: optimizer-state groups are the tierable objects
+    rt: Optional[UnimemRuntime] = None
+    if tcfg.use_unimem:
+        rt = UnimemRuntime(tcfg.machine, RuntimeConfig(
+            fast_capacity_bytes=tcfg.machine.fast.capacity_bytes))
+        rt.alloc("opt_state", payload=None,
+                 size_bytes=tree_bytes(opt_state), chunkable=True)
+        rt.alloc("params", payload=None, size_bytes=tree_bytes(params),
+                 pinned=True)
+        rt.start_loop(["data", "step", "ckpt"])
+
+    losses, times = [], []
+    for step in range(start_step, tcfg.steps):
+        t0 = time.perf_counter()
+        if rt:
+            rt.begin_iteration()
+            rt.phase_begin(0)
+        batch = data.batch_at(step)
+        if rt:
+            rt.phase_end(0, elapsed=time.perf_counter() - t0)
+            rt.phase_begin(1)
+        t1 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if rt:
+            rt.phase_end(1, elapsed=time.perf_counter() - t1,
+                         accesses={"opt_state": tree_bytes(opt_state) / 512,
+                                   "params": tree_bytes(params) / 512})
+            rt.phase_begin(2)
+        t2 = time.perf_counter()
+        if ckpt is not None and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        if rt:
+            rt.phase_end(2, elapsed=time.perf_counter() - t2)
+            rt.end_iteration()
+        losses.append(loss)
+        times.append(time.perf_counter() - t0)
+        if (step + 1) % tcfg.log_every == 0:
+            print(f"step {step + 1}: loss={loss:.4f} "
+                  f"({times[-1] * 1e3:.0f} ms)")
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"loss diverged at step {step}")
+    if ckpt is not None:
+        ckpt.save(tcfg.steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+    return TrainResult(losses, times, tcfg.steps,
+                       rt.stats() if rt else {})

@@ -1,0 +1,115 @@
+"""Training step builder: loss -> grads (microbatched) -> AdamW update.
+
+``microbatches > 1`` accumulates gradients over a ``lax.scan`` of
+microbatches (the activation-memory knob that, together with per-layer
+remat, bounds live activations to one microbatch x one layer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..optim import AdamWConfig, adamw_update
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                     microbatches: int = 1, remat: bool = True,
+                     lr: float = 3e-4) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_wrap(params, mb):
+        loss, metrics = lm.loss_fn(params, cfg, mb, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.grad(loss_wrap, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            grads, metrics = grad_fn(params, batch)
+        else:
+            resh = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                g, m = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, resh)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), ms)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, params, opt_state, opt_cfg, jnp.float32(lr))
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = metrics.pop("nll")
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_grads_step(cfg: ArchConfig, *, microbatches: int = 1,
+                     remat: bool = True) -> Callable:
+    """Forward+backward only — the device-resident phase of offload mode.
+
+    The optimizer update runs as separate per-shard phase programs whose
+    state the Unimem runtime keeps on the host tier (see
+    ``launch.dryrun.offload_programs``)."""
+
+    def loss_wrap(params, mb):
+        return lm.loss_fn(params, cfg, mb, remat=remat)
+
+    grad_fn = jax.grad(loss_wrap, has_aux=True)
+
+    def grads_step(params, batch):
+        if microbatches == 1:
+            return grad_fn(params, batch)
+        resh = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def body(acc, mb):
+            g, m = grad_fn(params, mb)
+            return jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, g), m
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        grads, ms = jax.lax.scan(body, zeros, resh)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        return grads, jax.tree_util.tree_map(lambda m: m.mean(), ms)
+
+    return grads_step
+
+
+def auto_microbatches(cfg: ArchConfig, global_batch: int, seq_len: int,
+                      dp: int, tp: int,
+                      *, act_budget_bytes: float = 2e9) -> int:
+    """Pick the microbatch count that bounds per-device live activations.
+
+    With per-layer remat the live set is ~ one boundary activation per layer
+    per microbatch: L x (tokens/dp) x d_model x 2 bytes / tp."""
+    tokens_per_dp = global_batch * seq_len / dp
+    per_layer = tokens_per_dp * cfg.d_model * 2 / tp
+    if cfg.is_moe:
+        # dispatch buffers / expert activations saved for backward
+        per_layer *= 4
+    total = per_layer * cfg.n_layers
+    mb = 1
+    while total / mb > act_budget_bytes and mb < global_batch:
+        mb *= 2
+    while global_batch % mb:
+        mb *= 2
+    return min(mb, global_batch)

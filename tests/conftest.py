@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the default single-device CPU backend (the 512-device flag is
+# set ONLY inside launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

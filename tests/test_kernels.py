@@ -1,0 +1,104 @@
+"""Per-kernel correctness: interpret-mode Pallas vs pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,K,G,S,T,D", [
+    (1, 1, 1, 128, 128, 128),
+    (2, 2, 2, 256, 256, 128),
+    (1, 2, 4, 128, 384, 128),     # GQA, T > S
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, K, G, S, T, D, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, K, G, S, D), dtype)
+    k = rand(ks[1], (B, K, T, D), dtype)
+    v = rand(ks[2], (B, K, T, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, force_pallas=True,
+                              interpret=True)
+    gold = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,length", [(1024, 700), (512, 512), (2048, 1)])
+def test_decode_attention(T, length, dtype):
+    B, K, G, D = 2, 2, 4, 128
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, K, G, D), dtype)
+    k = rand(ks[1], (B, K, T, D), dtype)
+    v = rand(ks[2], (B, K, T, D), dtype)
+    out = ops.decode_attention(q, k, v, length, force_pallas=True,
+                               interpret=True)
+    gold = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,Kd,N", [(256, 512, 256), (300, 700, 500),
+                                    (128, 128, 128)])
+def test_tiered_matmul(M, Kd, N, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = rand(ks[0], (M, Kd), dtype) * 0.1
+    w = rand(ks[1], (Kd, N), dtype) * 0.1
+    out = ops.tiered_matmul(x, w, force_pallas=True, interpret=True)
+    gold = ref.tiered_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("S,N,P,chunk", [(512, 64, 64, 256),
+                                         (300, 32, 64, 128),
+                                         (256, 16, 16, 256)])
+def test_ssd_scan(S, N, P, chunk, dtype):
+    B, H = 2, 3
+    ks = jax.random.split(KEY, 4)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, H, S)))
+    k = rand(ks[1], (B, H, S, N), dtype) * 0.3
+    v = rand(ks[2], (B, H, S, P), dtype) * 0.3
+    q = rand(ks[3], (B, H, S, N), dtype) * 0.3
+    out = ops.ssd_scan(a, k, v, q, chunk=chunk, force_pallas=True,
+                       interpret=True)
+    gold = ref.ssd_scan_ref(a, k, v, q)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_matches_ref():
+    """The model's jnp flash path equals the naive oracle too."""
+    from repro.models.attention import chunked_attention
+    B, S, H, D, K = 2, 256, 8, 64, 4
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, S, H, D), jnp.float32)
+    k = rand(ks[1], (B, S, K, D), jnp.float32)
+    v = rand(ks[2], (B, S, K, D), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, chunk=64, q_chunk=128)
+    qr = q.reshape(B, S, K, H // K, D).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)                  # (B, K, T, D)
+    vr = v.transpose(0, 2, 1, 3)
+    gold = ref.flash_attention_ref(qr, kr, vr, causal=True)
+    gold = gold.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+    np.testing.assert_allclose(out, gold, rtol=2e-5, atol=2e-5)

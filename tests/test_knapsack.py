@@ -1,0 +1,48 @@
+"""Property tests for the 0/1 knapsack placement solver."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.knapsack import Item, solve, total_size, total_value
+
+items_strategy = st.lists(
+    st.tuples(st.floats(-5.0, 50.0), st.integers(1, 200 * 1024 * 1024)),
+    min_size=0, max_size=20)
+
+
+@given(items=items_strategy, cap=st.integers(0, 1024 * 1024 * 1024))
+@settings(max_examples=200, deadline=None)
+def test_capacity_respected_and_values_positive(items, cap):
+    its = [Item(f"o{i}", v, s) for i, (v, s) in enumerate(items)]
+    chosen = solve(its, cap)
+    assert total_size(its, chosen) <= cap
+    by = {i.name: i for i in its}
+    assert all(by[c].value > 0 for c in chosen)
+    assert len(set(chosen)) == len(chosen)
+
+
+@given(items=items_strategy, cap=st.integers(1, 1024 * 1024 * 1024))
+@settings(max_examples=100, deadline=None)
+def test_no_profitable_leftover_fits(items, cap):
+    """No meaningfully-positive item that still fits was left out (local
+    optimality; values below fp64 addition precision may be dropped)."""
+    its = [Item(f"o{i}", v, s) for i, (v, s) in enumerate(items)]
+    chosen = set(solve(its, cap))
+    used = total_size(its, list(chosen))
+    vmax = max((abs(i.value) for i in its), default=0.0)
+    for it in its:
+        if it.name not in chosen and it.value > 1e-9 * max(vmax, 1.0):
+            # quantization rounds sizes up by at most one quantum
+            quantum = max(1, -(-cap // (1 << 14)))
+            assert it.size_bytes + quantum > cap - used
+
+
+def test_exact_small_instance():
+    its = [Item("a", 10.0, 6), Item("b", 9.0, 5), Item("c", 8.0, 5)]
+    # capacity 10: optimal is b+c (17) not a (10)
+    assert set(solve(its, 10)) == {"b", "c"}
+
+
+def test_negative_never_chosen():
+    its = [Item("a", -1.0, 1), Item("b", 2.0, 1)]
+    assert solve(its, 10) == ["b"]

@@ -1,0 +1,82 @@
+"""Unit + property tests for the paper's Eq. (1)-(5) performance models."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, Sensitivity,
+                        benefit, calibrate, classify, consumed_bandwidth,
+                        movement_cost, weight)
+from repro.core.perfmodel import benefit_bw, benefit_lat
+from repro.core.profiler import ObjectPhaseProfile
+
+M = PAPER_DRAM_NVM
+CF = CalibrationConstants()
+
+
+def prof(data_access=1e6, n_samples=1e5, with_access=1e4, time=0.1):
+    return ObjectPhaseProfile(0, "o", data_access, n_samples, with_access,
+                              time)
+
+
+def test_eq1_matches_paper_example():
+    # paper: 10s phase, 1 GHz CPU, sample every 1000 cycles -> 1e7 samples;
+    # 1e5 samples with accesses -> the object is "active" for 0.1s
+    p = ObjectPhaseProfile(0, "o", data_access=1e6, n_samples=1e7,
+                           samples_with_access=1e5, phase_time=10.0)
+    bw = consumed_bandwidth(p, M)
+    assert bw == pytest.approx(1e6 * M.cacheline_bytes / 0.1)
+
+
+def test_classification_thresholds():
+    peak = M.bw_peak
+    # consumed bw >= 80% of peak -> bandwidth sensitive
+    t = 1.0
+    acc_high = 0.9 * peak * t / M.cacheline_bytes
+    p = ObjectPhaseProfile(0, "o", acc_high, 1e6, 1e6, t)
+    assert classify(p, M) is Sensitivity.BANDWIDTH
+    acc_low = 0.05 * peak * t / M.cacheline_bytes
+    p = ObjectPhaseProfile(0, "o", acc_low, 1e6, 1e6, t)
+    assert classify(p, M) is Sensitivity.LATENCY
+    acc_mid = 0.5 * peak * t / M.cacheline_bytes
+    p = ObjectPhaseProfile(0, "o", acc_mid, 1e6, 1e6, t)
+    assert classify(p, M) is Sensitivity.MIXED
+
+
+@given(acc=st.floats(1.0, 1e9))
+@settings(max_examples=50, deadline=None)
+def test_eq2_eq3_benefits_positive(acc):
+    """Moving slow->fast can never predict negative benefit (fast tier is
+    faster on both axes in every profile)."""
+    p = prof(data_access=acc)
+    assert benefit_bw(p, M, CF) >= 0.0
+    assert benefit_lat(p, M, CF) >= 0.0
+    assert benefit(p, M, CF) >= 0.0
+
+
+@given(size=st.integers(1, 10 ** 10), overlap=st.floats(0.0, 10.0))
+@settings(max_examples=100, deadline=None)
+def test_eq4_cost_nonnegative_and_overlap_monotone(size, overlap):
+    c0 = movement_cost(size, M, 0.0)
+    c = movement_cost(size, M, overlap)
+    assert c >= 0.0
+    assert c <= c0                      # overlap can only reduce cost
+    if overlap >= size / M.copy_bw:
+        assert c == 0.0                 # fully hidden
+
+
+def test_eq5_weight():
+    assert weight(1.0, 0.3, 0.2) == pytest.approx(0.5)
+
+
+def test_mixed_takes_max():
+    p = prof()
+    b = benefit(p, M, CF, Sensitivity.MIXED)
+    assert b == pytest.approx(max(benefit_bw(p, M, CF),
+                                  benefit_lat(p, M, CF)))
+
+
+def test_calibration_positive_and_finite():
+    cf = calibrate(M)
+    assert 0.1 < cf.cf_bw < 10.0
+    assert 0.1 < cf.cf_lat < 10.0

@@ -1,0 +1,96 @@
+"""Planner invariants: capacity, dependency-safe triggers, best-of-two."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, PhaseProfiler,
+                        Planner, build_phase_graph)
+from repro.core.data_objects import ObjectRegistry
+from repro.core.phase import PhaseTraceEvent
+
+MB = 1024 ** 2
+M = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+
+
+def build_problem(obj_sizes, phase_refs, times):
+    reg = ObjectRegistry()
+    for name, size in obj_sizes.items():
+        reg.alloc(name, size)
+    graph = build_phase_graph([(f"p{i}", refs)
+                               for i, refs in enumerate(phase_refs)],
+                              times=times)
+    profiler = PhaseProfiler(M, seed=0)
+    for i, refs in enumerate(phase_refs):
+        profiler.observe(PhaseTraceEvent(i, times[i], dict(refs)))
+    profiler.annotate_graph(graph)
+    return reg, graph, profiler
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_plans_respect_capacity(seed):
+    import random
+    rng = random.Random(seed)
+    n_obj = rng.randint(1, 8)
+    sizes = {f"o{i}": rng.randint(1, 100) * MB for i in range(n_obj)}
+    n_ph = rng.randint(1, 6)
+    refs = []
+    for _ in range(n_ph):
+        r = {}
+        for o in sizes:
+            if rng.random() < 0.5:
+                r[o] = rng.uniform(1e4, 1e6)
+        refs.append(r)
+    times = [rng.uniform(0.01, 0.2) for _ in range(n_ph)]
+    cap = rng.randint(50, 200) * MB
+
+    reg, graph, prof = build_problem(sizes, refs, times)
+    planner = Planner(M, reg, CalibrationConstants(), cap)
+    for plan in (planner.plan_local(graph, prof),
+                 planner.plan_global(graph, prof)):
+        for residents in plan.residents:
+            assert sum(reg[o].size_bytes for o in residents) <= cap
+        # moves reference known objects; triggers precede needs
+        for m in plan.moves:
+            assert m.obj in reg
+            assert m.trigger_phase <= m.needed_by
+
+
+def test_trigger_points_respect_dependencies():
+    sizes = {"a": 10 * MB, "b": 10 * MB}
+    #       p0 uses a      p1 uses b        p2 uses a
+    refs = [{"a": 1e6}, {"b": 1e6}, {"a": 1e6}]
+    times = [0.1, 0.1, 0.1]
+    reg, graph, prof = build_problem(sizes, refs, times)
+    # a needed at p2; last prior use at p0 -> earliest trigger p1
+    assert graph.trigger_point("a", 2) == 1
+    # overlap window = time of p1
+    assert abs(graph.overlap_window("a", 2) - 0.1) < 1e-12
+
+
+def test_best_of_two_picks_lower_predicted():
+    sizes = {"a": 10 * MB, "b": 10 * MB}
+    refs = [{"a": 1e7}, {"b": 1e7}]
+    times = [0.2, 0.2]
+    reg, graph, prof = build_problem(sizes, refs, times)
+    planner = Planner(M, reg, CalibrationConstants(), 12 * MB)
+    best = planner.plan(graph, prof)
+    lo = planner.plan_local(graph, prof)
+    gl = planner.plan_global(graph, prof)
+    assert best.predicted_iteration_time == min(
+        lo.predicted_iteration_time, gl.predicted_iteration_time)
+
+
+def test_pinned_objects_never_move():
+    reg = ObjectRegistry()
+    reg.alloc("pinned", 10 * MB, pinned=True)
+    reg.alloc("free", 10 * MB)
+    graph = build_phase_graph(
+        [("p0", {"pinned": 1e7, "free": 1e7})], times=[0.1])
+    prof = PhaseProfiler(M, seed=0)
+    prof.observe(PhaseTraceEvent(0, 0.1, {"pinned": 1e7, "free": 1e7}))
+    prof.annotate_graph(graph)
+    planner = Planner(M, reg, CalibrationConstants(), 15 * MB)
+    for plan in (planner.plan_local(graph, prof),
+                 planner.plan_global(graph, prof)):
+        assert all(m.obj != "pinned" for m in plan.moves)

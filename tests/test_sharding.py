@@ -1,0 +1,82 @@
+"""Sharding rule tests — pure spec logic over an AbstractMesh (no devices)."""
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_fit_drops_nondivisible_axes():
+    # 8 heads cannot shard 16 ways -> dropped
+    assert shd.fit(MESH, (8, 128), "model", None) == P(None, None)
+    assert shd.fit(MESH, (32, 128), "model", None) == P("model", None)
+
+
+def test_fit_keeps_divisible_prefix():
+    # ("pod","data") over dim 4: pod(2) divides, pod*data(32) does not
+    spec = shd.fit(MESH3, (4, 64), ("pod", "data"), None)
+    assert spec == P("pod", None)
+
+
+def test_param_specs_rules():
+    pshapes = {
+        "embed": jax.ShapeDtypeStruct((64000, 4096), jax.numpy.bfloat16),
+        "head": jax.ShapeDtypeStruct((4096, 64000), jax.numpy.bfloat16),
+        "blocks": {
+            "attn": {"wq": jax.ShapeDtypeStruct((32, 4096, 4096),
+                                                jax.numpy.bfloat16)},
+            "mlp": {"w_down": jax.ShapeDtypeStruct((32, 11008, 4096),
+                                                   jax.numpy.bfloat16)},
+        },
+    }
+    specs = shd.param_specs(MESH, pshapes)
+    assert specs["embed"] == P(None, "model")          # untied: d-sharded
+    assert specs["head"] == P(None, "model")
+    assert specs["blocks"]["attn"]["wq"] == P(None, ("data",), "model")
+    assert specs["blocks"]["mlp"]["w_down"] == P(None, "model", ("data",))
+
+
+def test_tied_embed_vocab_sharded():
+    pshapes = {"embed": jax.ShapeDtypeStruct((256000, 2048),
+                                             jax.numpy.bfloat16)}
+    specs = shd.param_specs(MESH, pshapes, tied=True)
+    assert specs["embed"] == P("model", None)
+
+
+def test_cache_specs_kv_head_fallback_to_sequence():
+    cache = {"k": jax.ShapeDtypeStruct((28, 128, 32768, 2, 128),
+                                       jax.numpy.bfloat16),
+             "v": jax.ShapeDtypeStruct((28, 128, 32768, 2, 128),
+                                       jax.numpy.bfloat16)}
+    specs = shd.cache_specs(MESH, None, cache, batch=128)
+    # kv=2 cannot split 16 ways -> sequence sharded over "model" (SP)
+    assert specs["k"] == P(None, ("data",), "model", None, None)
+
+
+def test_cache_specs_kv_heads_when_divisible():
+    cache = {"k": jax.ShapeDtypeStruct((32, 128, 32768, 32, 128),
+                                       jax.numpy.bfloat16)}
+    specs = shd.cache_specs(MESH, None, cache, batch=128)
+    assert specs["k"] == P(None, ("data",), None, "model", None)
+
+
+def test_cache_specs_sp_when_batch_too_small():
+    cache = {"k": jax.ShapeDtypeStruct((7, 1, 524288, 32, 64),
+                                       jax.numpy.bfloat16)}
+    specs = shd.cache_specs(MESH, None, cache, batch=1)
+    # batch=1: shard the 500k sequence over "data" + heads over "model"
+    assert specs["k"] == P(None, None, "data", "model", None)
+
+
+def test_opt_specs_mirror_params():
+    pshapes = {"w": jax.ShapeDtypeStruct((4096, 4096), jax.numpy.bfloat16)}
+    pspecs = shd.param_specs(MESH, pshapes)
+    oshapes = {"mu": {"w": jax.ShapeDtypeStruct((4096, 4096),
+                                                jax.numpy.float32)},
+               "step": jax.ShapeDtypeStruct((), jax.numpy.int32)}
+    ospecs = shd.opt_specs(MESH, oshapes, pshapes, pspecs)
+    assert ospecs["mu"]["w"] == pspecs["w"]
+    assert ospecs["step"] == P()
