@@ -28,11 +28,16 @@ def run_static(machine: MachineProfile, wl: SimWorkload, tier: str,
 def run_unimem(machine: MachineProfile, wl: SimWorkload,
                dram_bytes: int = DEFAULT_DRAM, iters: int = ITERS,
                config: Optional[RuntimeConfig] = None,
-               cf: Optional[CalibrationConstants] = None):
+               cf: Optional[CalibrationConstants] = None,
+               mover: str = "slack", **config_kw):
+    if config is not None and (mover != "slack" or config_kw):
+        raise ValueError("pass mover/config knobs either via config= or as "
+                         "keyword arguments, not both")
     cf = cf or calibrate(machine)
     rt = UnimemRuntime(
         machine,
-        config or RuntimeConfig(fast_capacity_bytes=dram_bytes), cf=cf)
+        config or RuntimeConfig(fast_capacity_bytes=dram_bytes, mover=mover,
+                                **config_kw), cf=cf)
     for n, s in wl.objects.items():
         rt.alloc(n, size_bytes=s, chunkable=wl.chunkable.get(n, False))
     rt.start_loop([p.name for p in wl.phases],

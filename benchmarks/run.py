@@ -14,7 +14,7 @@ import sys
 import time
 
 from repro.core import PAPER_DRAM_NVM, calibrate
-from repro.sim import NPB_WORKLOADS, lm_train_workload
+from repro.sim import NPB_WORKLOADS, SCENARIO_WORKLOADS, lm_train_workload
 from repro.core.tiers import TPU_V5E
 
 from .common import (DEFAULT_DRAM, MB, run_static, run_unimem, run_xmen)
@@ -198,6 +198,47 @@ def bench_lm_tiering() -> None:
              f"overlap={100 * (rt.stats()['overlap_fraction'] or 0):.0f}%")
 
 
+# ------------------------------------- scenario matrix: slack vs FIFO mover
+def bench_scenarios() -> None:
+    """Slack-aware async scheduler vs the FIFO phase-boundary mover on the
+    steady-state-churn scenario matrix (KV-cache serving, MoE expert churn,
+    pointer-chasing graph).  Reports per scenario: steady iteration time
+    normalized to DRAM-only for each policy, absolute steady-state fence
+    stall per iteration, and the slack engine's overlap fractions
+    (move-count based and copy-time based).
+
+    ``drift_threshold`` is pinned high so both movers execute the *same*
+    plan — the comparison isolates the migration engine."""
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+    for wl_name, make in SCENARIO_WORKLOADS.items():
+        wl = make()
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        nvm = run_static(mach, wl, "slow")
+        results = {}
+        for mover in ("fifo", "slack"):
+            res, rt = run_unimem(mach, wl, mover=mover, drift_threshold=10.0)
+            tail = res.phase_trace[len(res.phase_trace) // 2:]
+            stall = (sum(p.stall_s for p in tail)
+                     / (len(tail) / len(wl.phases)))
+            results[mover] = (res, rt, stall)
+        us = (time.perf_counter() - t0) * 1e6
+        d = dram.steady_iteration_time
+        (fifo, _, fifo_stall) = results["fifo"]
+        (slack, srt, slack_stall) = results["slack"]
+        s = srt.stats()
+        emit(f"scenario_{wl_name}", us,
+             f"nvm={nvm.steady_iteration_time / d:.3f};"
+             f"fifo={fifo.steady_iteration_time / d:.3f};"
+             f"slack={slack.steady_iteration_time / d:.3f};"
+             f"speedup={fifo.steady_iteration_time / slack.steady_iteration_time:.3f};"
+             f"fifo_stall_s={fifo_stall:.4f};"
+             f"slack_stall_s={slack_stall:.4f};"
+             f"overlap={s['overlap_fraction']:.2f};"
+             f"overlap_time={(s['overlap_time_fraction'] or 0):.2f};"
+             f"strategy={s['strategy']}")
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels() -> None:
     """Interpret-mode sanity timing + analytic v5e roofline per kernel."""
@@ -242,6 +283,7 @@ BENCHES = {
     "fig12": bench_scaling,
     "fig13": bench_dram_size,
     "lm_tiering": bench_lm_tiering,
+    "scenarios": bench_scenarios,
     "kernels": bench_kernels,
 }
 

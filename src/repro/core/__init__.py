@@ -4,12 +4,14 @@ contribution, adapted to TPU memory tiers)."""
 from .data_objects import DataObject, ObjectRegistry
 from .knapsack import Item, solve as knapsack_solve
 from .monitor import VariationMonitor
-from .mover import JaxTierBackend, ProactiveMover, SimTierBackend
+from .mover import (ChannelSimBackend, JaxTierBackend, MoveRecord,
+                    ProactiveMover, SimTierBackend, SlackAwareMover)
 from .perfmodel import (CalibrationConstants, Sensitivity, benefit, calibrate,
                         classify, consumed_bandwidth, movement_cost, weight)
 from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
                     build_phase_graph)
-from .planner import MoveOp, PlacementPlan, Planner
+from .planner import (MoveOp, PlacementPlan, Planner, ScheduledMove,
+                      emit_schedule)
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
 from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
@@ -19,10 +21,11 @@ from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
 __all__ = [
     "DataObject", "ObjectRegistry", "Item", "knapsack_solve",
     "VariationMonitor", "JaxTierBackend", "ProactiveMover", "SimTierBackend",
+    "ChannelSimBackend", "SlackAwareMover", "MoveRecord",
     "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
     "consumed_bandwidth", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",
-    "MoveOp", "PlacementPlan", "Planner",
+    "MoveOp", "PlacementPlan", "Planner", "ScheduledMove", "emit_schedule",
     "ObjectPhaseProfile", "PhaseProfiler",
     "RuntimeConfig", "UnimemRuntime",
     "MachineProfile", "TierSpec", "PROFILES", "PAPER_DRAM_NVM", "STT_RAM",

@@ -13,6 +13,22 @@ Here the "helper thread" is whatever the backend provides:
   the same code path is exercised with host memory kinds.
 * :class:`SimTierBackend` — a simulated copy engine with a FIFO service
   queue, used by the discrete-event simulator and the benchmarks.
+* :class:`ChannelSimBackend` — a simulated *multi-channel* copy engine:
+  up to N copies in flight at once, sharing the engine's aggregate
+  bandwidth; tier flips only when a copy lands (no phase may consume an
+  object mid-flight).
+
+Two movers execute a :class:`~.planner.PlacementPlan` against a backend:
+
+* :class:`ProactiveMover` — the paper's baseline: a FIFO queue serviced in
+  plan order, fences only at phase boundaries.
+* :class:`SlackAwareMover` — the overlap engine: walks the plan's emitted
+  schedule, computes per-move slack (latest start such that the object lands
+  before its first consuming phase), releases moves most-urgent-first onto
+  the channels, and consumes ``chunkable`` objects chunk-by-chunk so early
+  chunks are read from the fast tier while later chunks are still in flight
+  (double buffering).  Fence stalls appear only when slack is truly
+  exhausted.
 """
 
 from __future__ import annotations
@@ -25,7 +41,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Protocol
 import jax
 
 from .data_objects import DataObject, ObjectRegistry
-from .planner import MoveOp, PlacementPlan
+from .phase import PhaseGraph
+from .planner import MoveOp, PlacementPlan, ScheduledMove
 from .tiers import MachineProfile
 
 
@@ -107,6 +124,149 @@ class SimTierBackend:
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
+class _ChannelCopy:
+    """One in-flight copy on the multi-channel engine."""
+
+    obj: DataObject
+    dst: str
+    size_bytes: int
+    start: float
+    done: float
+    channel: int
+    rate: float
+    issued_at: float
+    landed: bool = False
+
+
+class ChannelSimBackend:
+    """Simulated multi-channel copy engine.
+
+    ``channels`` copies may be in flight concurrently, one per channel; a
+    copy issued while ``k`` other channels are busy is served at
+    ``copy_bw / (k+1)`` (the engine's aggregate bandwidth is shared among
+    concurrent transfers; a lone copy gets the full engine, matching the
+    FIFO baseline's service rate).  The rate is fixed at issue time, which
+    keeps completion times deterministic and monotone in issue order per
+    channel.
+
+    Unlike :class:`SimTierBackend`, an object's ``tier`` flips only when its
+    copy *lands* — callers advance landings with :meth:`settle` (at phase
+    boundaries) or force completion with :meth:`complete` after absorbing a
+    fence stall.  A phase can therefore never observe fast-tier service for
+    data still in flight.
+    """
+
+    def __init__(self, machine: MachineProfile, now_fn: Callable[[], float],
+                 channels: int = 2):
+        if channels < 1:
+            raise ValueError("need at least one copy channel")
+        self.machine = machine
+        self.now_fn = now_fn
+        self.channels = channels
+        self._free_at = [0.0] * channels
+        self.copies: List[_ChannelCopy] = []
+
+    def place(self, obj: DataObject, dst: str) -> None:
+        """Allocation-time placement: no copy, the object starts in ``dst``
+        (paper §3.2 initial placement happens at ``unimem_malloc``)."""
+        obj.tier = dst
+
+    def start_move(self, obj: DataObject, dst: str,
+                   after: Optional[_ChannelCopy] = None) -> _ChannelCopy:
+        """Issue a copy on the earliest-free channel.  ``after`` delays the
+        start until another copy lands (eviction -> incoming chaining: the
+        incoming copy cannot begin until its space is free).
+
+        Contention: copies active while this one starts are re-rated to the
+        equal share ``copy_bw / n`` (their completed bytes are preserved and
+        their queued successors shift later), so the engine's aggregate
+        bandwidth never exceeds ``copy_bw``.  Rates are not raised back when
+        a copy finishes — a deterministic, slightly conservative model."""
+        now = self.now_fn()
+        ch = min(range(self.channels), key=lambda c: self._free_at[c])
+        start = max(now, self._free_at[ch])
+        if after is not None:
+            start = max(start, after.done)
+        active = [c for c in self.copies
+                  if not c.landed and c.channel != ch
+                  and c.start <= start < c.done]
+        rate = self.machine.copy_bw / (len(active) + 1)
+        for c in active:
+            if c.rate <= rate:
+                continue
+            remaining = (c.done - start) * c.rate
+            delta = (start + remaining / rate) - c.done
+            c.rate = rate
+            self._shift_channel(c.channel, c.done, delta)
+            c.done += delta
+        dur = obj.size_bytes / rate
+        copy = _ChannelCopy(obj, dst, obj.size_bytes, start, start + dur,
+                            ch, rate, issued_at=now)
+        self._free_at[ch] = max(self._free_at[ch], copy.done)
+        self.copies.append(copy)
+        return copy
+
+    def _shift_channel(self, ch: int, from_time: float, delta: float) -> None:
+        """Push the queued copies of ``ch`` (start >= from_time) later by
+        ``delta`` — their predecessor just slowed down."""
+        if delta <= 0:
+            return
+        for c in self.copies:
+            if c.channel == ch and not c.landed and c.start >= from_time - 1e-12:
+                c.start += delta
+                c.done += delta
+        self._free_at[ch] += delta
+
+    def wait(self, handle: _ChannelCopy) -> float:
+        """Stall (seconds past ``now``) a fence on this copy must absorb."""
+        return max(0.0, handle.done - self.now_fn())
+
+    def complete(self, handle: _ChannelCopy) -> None:
+        """Mark the copy landed (the caller absorbed any remaining stall).
+
+        Earlier unlanded copies of the same object (a superseded
+        direction-flip, e.g. an eviction the completing fetch was chained
+        after) are retired without a tier flip — otherwise a later
+        ``settle`` would apply their stale flip on top of this one."""
+        if handle.landed:
+            return
+        for c in self.copies:
+            if (not c.landed and c.obj is handle.obj
+                    and c.done <= handle.done and c is not handle):
+                c.landed = True
+        handle.obj.tier = handle.dst
+        handle.landed = True
+
+    def settle(self, now: float) -> None:
+        """Land every copy whose completion time has passed, in completion
+        order (two in-flight copies of one object — an eviction chained
+        into a re-fetch — must flip the tier in ``done`` order)."""
+        for c in sorted((c for c in self.copies if not c.landed),
+                        key=lambda c: c.done):
+            if c.done <= now:
+                c.obj.tier = c.dst
+                c.landed = True
+
+    def max_concurrency(self) -> int:
+        """Peak number of copies simultaneously in flight (for invariants)."""
+        events = []
+        for c in self.copies:
+            events.append((c.start, 1))
+            events.append((c.done, -1))
+        peak = cur = 0
+        # at equal timestamps, land (-1) before launch (+1): back-to-back
+        # copies on one channel are serial, not concurrent
+        for _, delta in sorted(events, key=lambda e: (e[0], e[1])):
+            cur += delta
+            peak = max(peak, cur)
+        return peak
+
+    def busy_seconds(self) -> float:
+        return sum(c.done - c.start for c in self.copies)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
 class MoveStats:
     n_moves: int = 0
     moved_bytes: int = 0
@@ -175,3 +335,258 @@ class ProactiveMover:
         for obj, h in list(self._inflight.items()):
             self.backend.wait(h)
             del self._inflight[obj]
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MoveRecord:
+    """Audit record of one issued move (property tests consume these)."""
+
+    obj: str
+    dst: str
+    trigger_phase: int
+    needed_by: int
+    size_bytes: int
+    issued_at: float            # virtual time the scheduler released the move
+    start: float                # virtual time the copy began on its channel
+    done: float                 # virtual time the copy landed
+    channel: int
+    slack_s: float
+    fenced_at: float = float("nan")   # virtual time of the consuming fence
+    fence_stall_s: float = 0.0
+    superseded: bool = False          # overwritten by a direction-flip move
+
+
+class SlackAwareMover:
+    """Slack-aware asynchronous migration scheduler.
+
+    Lookahead over the plan's emitted schedule (:class:`ScheduledMove`): at
+    each phase boundary the mover
+
+    1. *settles* the backend — copies that landed flip their object's tier;
+    2. *releases* the moves whose trigger window opens here, tightest slack
+       first (ties broken by predicted benefit per byte), onto the backend's
+       copy channels.  Evictions are released before fetches, and a fetch
+       this same phase consumes is chained after the last eviction (its
+       space is only free then — paper Fig 6);
+    3. *fences* the moves this phase consumes.  Plain objects stall for the
+       maximum remaining copy time; chunked objects are consumed chunk by
+       chunk (chunk ``k``'s virtual consume point is the phase start plus
+       the phase-time fraction of the sibling bytes preceding it), so a late
+       chunk stalls only its own remainder — double buffering.  Evictions
+       are never fenced: the phase does not read evicted data.
+
+    Works against any :class:`TierBackend`; the timing-aware paths activate
+    when the backend exposes the simulator's ``settle``/``complete``/``done``
+    surface (blocking backends such as :class:`JaxTierBackend` fence with
+    zero recorded stall, exactly like :class:`ProactiveMover`).
+    """
+
+    def __init__(self, registry: ObjectRegistry, backend: TierBackend,
+                 graph: Optional[PhaseGraph] = None):
+        self.registry = registry
+        self.backend = backend
+        self.graph = graph
+        self._inflight: Dict[str, Any] = {}      # obj name -> handle
+        self._records: Dict[str, MoveRecord] = {}  # obj name -> open record
+        self.trace: List[MoveRecord] = []
+        self.stats = MoveStats()
+
+    # ------------------------------------------------------------------ utils
+    def load_plan(self, plan: PlacementPlan, graph: PhaseGraph) -> None:
+        """Bind the profiled phase graph (phase-time estimates for the
+        chunk-consumption model and slack fallbacks)."""
+        self.graph = graph
+
+    def _now(self) -> float:
+        now_fn = getattr(self.backend, "now_fn", None)
+        return now_fn() if now_fn is not None else 0.0
+
+    def _done_of(self, handle: Any) -> Optional[float]:
+        return getattr(handle, "done", None)
+
+    def _complete(self, handle: Any) -> None:
+        complete = getattr(self.backend, "complete", None)
+        if complete is not None and handle is not None:
+            complete(handle)
+
+    def _count_fence(self, stall: float) -> None:
+        if stall <= 1e-12:
+            self.stats.overlapped_moves += 1
+
+    # ------------------------------------------------------------------ fence
+    def _fence(self, plan: PlacementPlan, phase_index: int,
+               now: float) -> float:
+        """Absorb remaining copy time for every move this phase consumes.
+
+        Evictions are *not* fenced: the phase never reads the evicted data,
+        and a fetch that depends on the freed space was chained after the
+        eviction copy at release time — the eviction itself stays off the
+        critical path (unlike the FIFO baseline, which stalls on it)."""
+        singles: List[Any] = []
+        groups: Dict[str, List[Any]] = {}
+        for m in plan.fences_for_phase(phase_index):
+            h = self._inflight.get(m.obj)
+            if h is None:
+                continue
+            if m.dst == "slow":
+                # eviction: never fenced (the phase does not read evicted
+                # data); once landed it counts as a fully-overlapped move
+                done = self._done_of(h)
+                if done is None or done <= now:
+                    self._inflight.pop(m.obj)
+                    self.stats.overlapped_moves += 1
+                    self._complete(h)
+                    self._finish_record(m.obj, now, 0.0)
+                continue
+            self._inflight.pop(m.obj)
+            dob = self.registry[m.obj] if m.obj in self.registry else None
+            if dob is not None and dob.parent is not None:
+                groups.setdefault(dob.parent, []).append((dob, m, h))
+            else:
+                singles.append((m, h))
+
+        stall = 0.0
+        for m, h in singles:
+            done = self._done_of(h)
+            if done is None:
+                # blocking backend (real arrays): the fence must block here
+                self.backend.wait(h)
+                s = 0.0
+            else:
+                s = max(0.0, done - now)
+            # parallel channels: waiting on all fenced copies costs the max
+            stall = max(stall, s)
+            self._count_fence(s)
+            self._complete(h)
+            self._finish_record(m.obj, now, s)
+
+        phase_est = (self.graph[phase_index].time
+                     if self.graph is not None else 0.0)
+        t0 = now + stall
+        extra_max = 0.0
+        for parent, entries in groups.items():
+            extra_max = max(extra_max,
+                            self._fence_chunks(parent, entries, t0, phase_est))
+        stall += extra_max
+        self.stats.fence_stall_s += stall
+        return stall
+
+    def _fence_chunks(self, parent: str, entries: List[Any], t0: float,
+                      phase_est: float) -> float:
+        """Double-buffered consumption of one chunked object.
+
+        Chunks are consumed in index order across the phase; chunk ``k``'s
+        consume point is ``t0 + phase_est * frac(bytes before k)``.  A chunk
+        landing after its consume point stalls only its own remainder; the
+        stall pushes every later consume point back (``extra``)."""
+        siblings = sorted((o for o in self.registry if o.parent == parent),
+                          key=lambda o: o.chunk_index or 0)
+        total = sum(o.size_bytes for o in siblings) or 1
+        before: Dict[str, int] = {}
+        acc = 0
+        for o in siblings:
+            before[o.name] = acc
+            acc += o.size_bytes
+        extra = 0.0
+        for dob, m, h in sorted(entries, key=lambda e: e[0].chunk_index or 0):
+            consume = t0 + extra + phase_est * (before[dob.name] / total)
+            done = self._done_of(h)
+            if done is None:
+                self.backend.wait(h)    # blocking backend: fence the chunk
+                late = 0.0
+            else:
+                late = max(0.0, done - consume)
+            extra += late
+            self._count_fence(late)
+            self._complete(h)
+            self._finish_record(m.obj, consume, late)
+        return extra
+
+    def _finish_record(self, obj: str, fenced_at: float, stall: float,
+                       superseded: bool = False) -> None:
+        rec = self._records.pop(obj, None)
+        if rec is not None:
+            rec.fenced_at = fenced_at
+            rec.fence_stall_s = stall
+            rec.superseded = superseded
+
+    # ---------------------------------------------------------------- release
+    def _release(self, plan: PlacementPlan, phase_index: int, n_phases: int,
+                 now: float) -> None:
+        """Issue the moves whose trigger window opens at this phase, most
+        urgent first.  Fetches the entered phase itself consumes are chained
+        after the evictions freeing their space; the subsequent fence absorbs
+        whatever copy time remains."""
+        if plan.schedule:
+            entries = plan.scheduled_for_phase(phase_index, n_phases)
+        else:   # hand-built plan without timing: wrap the raw ops
+            entries = [ScheduledMove(m, 0.0, 0.0, 0.0)
+                       for m in plan.moves_for_phase(phase_index, n_phases)]
+        evictions = [e for e in entries if e.op.dst == "slow"]
+        fetches = [e for e in entries if e.op.dst != "slow"]
+
+        last_evict = None
+        for e in evictions:
+            h = self._issue(e, now)
+            if h is not None:
+                last_evict = h
+
+        for e in fetches:
+            same_phase = e.op.needed_by % n_phases == phase_index % n_phases
+            self._issue(e, now, after=last_evict if same_phase else None)
+
+    def _issue(self, entry: ScheduledMove, now: float,
+               after: Any = None) -> Optional[Any]:
+        m = entry.op
+        if m.obj not in self.registry:
+            return None
+        obj = self.registry[m.obj]
+        pending = self._inflight.get(m.obj)
+        if pending is not None:
+            if getattr(pending, "dst", None) == m.dst:
+                return None     # identical move already in flight
+            # direction flip (e.g. re-fetch of an object whose eviction is
+            # still in flight): chain after the pending copy.  The pending
+            # copy was never fenced, so it ran entirely in the background.
+            if after is None or (getattr(pending, "done", 0.0)
+                                 > getattr(after, "done", 0.0)):
+                after = pending
+            self.stats.overlapped_moves += 1
+            self._finish_record(m.obj, now, 0.0, superseded=True)
+        elif obj.tier == m.dst:
+            return None
+        try:
+            h = self.backend.start_move(obj, m.dst, after=after)
+        except TypeError:       # backend without dependency chaining
+            h = self.backend.start_move(obj, m.dst)
+        self.stats.n_moves += 1
+        self.stats.moved_bytes += m.size_bytes
+        self._inflight[m.obj] = h
+        rec = MoveRecord(
+            obj=m.obj, dst=m.dst, trigger_phase=m.trigger_phase,
+            needed_by=m.needed_by, size_bytes=m.size_bytes, issued_at=now,
+            start=getattr(h, "start", now),
+            done=self._done_of(h) if self._done_of(h) is not None else now,
+            channel=getattr(h, "channel", 0), slack_s=entry.slack_s)
+        self._records[m.obj] = rec
+        self.trace.append(rec)
+        return h
+
+    # ------------------------------------------------------------- entrypoint
+    def on_phase_start(self, plan: PlacementPlan, phase_index: int,
+                       n_phases: int) -> float:
+        now = self._now()
+        settle = getattr(self.backend, "settle", None)
+        if settle is not None:
+            settle(now)
+        # release first so moves this phase both triggers AND consumes flow
+        # through the same fence logic (incl. chunk-granular consumption)
+        self._release(plan, phase_index, n_phases, now)
+        return self._fence(plan, phase_index, now)
+
+    def drain(self) -> None:
+        for name, h in list(self._inflight.items()):
+            self.backend.wait(h)
+            self._complete(h)
+            del self._inflight[name]

@@ -100,10 +100,16 @@ class PhaseGraph:
     def overlap_window(self, obj: str, phase_index: int) -> float:
         """``mem_comp_overlap`` of Eq. (4): time between the trigger point and
         the start of ``phase_index``."""
+        return self.window_between(self.trigger_point(obj, phase_index),
+                                   phase_index)
+
+    def window_between(self, trigger_phase: int, needed_by: int) -> float:
+        """Execution time between the start of ``trigger_phase`` and the start
+        of ``needed_by`` (``trigger_phase`` may be negative: previous
+        iteration).  This is the copy window a scheduled move can overlap."""
         n = len(self.phases)
-        trig = self.trigger_point(obj, phase_index)
         total = 0.0
-        for k in range(trig, phase_index):
+        for k in range(trigger_phase, needed_by):
             total += self.phases[k % n].time
         return total
 

@@ -36,7 +36,9 @@ class MoveOp:
 
     ``trigger_phase`` may be negative: trigger in the *previous* iteration,
     ``n + trigger_phase`` phases from its start.  ``est_unhidden_cost`` is the
-    Eq. (4) cost the model expects to remain on the critical path."""
+    Eq. (4) cost the model expects to remain on the critical path.
+    ``est_benefit`` is the Eq. (5) benefit that justified the move — the
+    slack-aware scheduler uses it to break priority ties."""
 
     obj: str
     dst: str                     # "fast" | "slow"
@@ -44,6 +46,31 @@ class MoveOp:
     needed_by: int               # phase index whose start fences the move
     size_bytes: int
     est_unhidden_cost: float = 0.0
+    est_benefit: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledMove:
+    """A MoveOp with timing annotations: *when* to start it, not just where
+    the object lives (the schedule-emission path of the slack-aware mover).
+
+    ``window_s`` is the compute time between the move's trigger point and the
+    start of its consuming phase; ``duration_s`` the copy time at full engine
+    bandwidth; ``slack_s = window_s - duration_s`` is how long the move's
+    start may be delayed past its trigger before it lands late.  Negative
+    slack means the fence will stall no matter what — those moves are issued
+    first."""
+
+    op: MoveOp
+    window_s: float
+    duration_s: float
+    slack_s: float
+
+    @property
+    def urgency(self) -> tuple:
+        """Sort key: tightest slack first, then biggest benefit per byte."""
+        density = self.op.est_benefit / max(self.op.size_bytes, 1)
+        return (self.slack_s, -density)
 
 
 @dataclasses.dataclass
@@ -53,6 +80,10 @@ class PlacementPlan:
     moves: List[MoveOp]
     predicted_iteration_time: float
     baseline_iteration_time: float
+    # Timing-annotated schedule (one entry per MoveOp), emitted by the
+    # planner when it has a profiled graph; movers that don't need timing
+    # (the FIFO baseline) simply ignore it.
+    schedule: List[ScheduledMove] = dataclasses.field(default_factory=list)
 
     def moves_for_phase(self, phase_index: int, n_phases: int) -> List[MoveOp]:
         """Moves triggered at the start of ``phase_index`` (wrapping)."""
@@ -62,9 +93,28 @@ class PlacementPlan:
     def fences_for_phase(self, phase_index: int) -> List[MoveOp]:
         return [m for m in self.moves if m.needed_by == phase_index]
 
+    def scheduled_for_phase(self, phase_index: int,
+                            n_phases: int) -> List["ScheduledMove"]:
+        """Schedule entries released at the start of ``phase_index``, most
+        urgent first."""
+        out = [s for s in self.schedule
+               if s.op.trigger_phase % n_phases == phase_index % n_phases]
+        return sorted(out, key=lambda s: s.urgency)
+
     @property
     def total_moved_bytes(self) -> int:
         return sum(m.size_bytes for m in self.moves)
+
+
+def emit_schedule(moves: Sequence[MoveOp], graph, copy_bw: float
+                  ) -> List[ScheduledMove]:
+    """Annotate each move with its copy window, duration and slack."""
+    out: List[ScheduledMove] = []
+    for m in moves:
+        window = graph.window_between(m.trigger_phase, m.needed_by)
+        duration = m.size_bytes / copy_bw
+        out.append(ScheduledMove(m, window, duration, window - duration))
+    return out
 
 
 class Planner:
@@ -140,10 +190,12 @@ class Planner:
                     # earlier phases (paper Fig 6: movement respects the
                     # availability of DRAM space).
                     cost = perfmodel.movement_cost(size(o), self.machine, 0.0)
+                    # deterministic tie-break by name: hash-order of the
+                    # residents set must never leak into the plan
                     evictable = sorted(
                         (r for r in residents
                          if r not in ph.refs and not self.registry[r].pinned),
-                        key=size)
+                        key=lambda r: (size(r), r))
                     got, evict_bytes = 0, 0
                     for r in evictable:
                         if got >= deficit:
@@ -160,7 +212,7 @@ class Planner:
             chosen = set(knapsack.solve(items, self.capacity))
 
             # Enact: move chosen non-residents in, evicting just enough.
-            for o in sorted(chosen, key=size, reverse=True):
+            for o in sorted(chosen, key=lambda o: (-size(o), o)):
                 if o in residents:
                     continue
                 needed_evict = False
@@ -172,7 +224,7 @@ class Planner:
                         (r for r in residents
                          if r not in ph.refs and r not in chosen
                          and not self.registry[r].pinned),
-                        key=size)
+                        key=lambda r: (size(r), r))
                     freed = 0
                     for r in evictable:
                         if freed >= deficit:
@@ -190,7 +242,7 @@ class Planner:
                         else graph.trigger_point(o, ph.index))
                 m = meta[o]
                 moves.append(MoveOp(o, "fast", trig, ph.index, size(o),
-                                    m["cost"]))
+                                    m["cost"], est_benefit=m.get("bft", 0.0)))
                 residents.add(o)
             placements.append(set(residents))
 
@@ -199,12 +251,13 @@ class Planner:
         # the slow tier), plus the unhidden movement/eviction costs.
         predicted = graph.iteration_time()
         for ph in graph:
-            for o in placements[ph.index]:
+            for o in sorted(placements[ph.index]):   # fixed fp-sum order
                 if o in originally_slow:
                     predicted -= self._benefit(profiler, ph.index, o)
         predicted += sum(m.est_unhidden_cost for m in moves)
         return PlacementPlan("local", placements, moves,
-                             max(predicted, 0.0), graph.iteration_time())
+                             max(predicted, 0.0), graph.iteration_time(),
+                             emit_schedule(moves, graph, self.machine.copy_bw))
 
     # ---------------------------------------------------------- global search
     def plan_global(self, graph: PhaseGraph, profiler: PhaseProfiler) -> PlacementPlan:
@@ -227,9 +280,9 @@ class Planner:
         for p in graph:
             for o in p.refs:
                 first_ref.setdefault(o, p.index)
-        for o in residents0 - chosen:
+        for o in sorted(residents0 - chosen):   # deterministic move order
             moves.append(MoveOp(o, "slow", 0, 0, size(o), 0.0))
-        for o in chosen:
+        for o in sorted(chosen, key=lambda o: (first_ref.get(o, 0), o)):
             if o in originally_slow:
                 predicted -= by[o].value
             if o not in residents0:
@@ -238,10 +291,11 @@ class Planner:
                 # (this is what makes the paper's Table-4 overlap percentages
                 # non-zero for global placements).
                 moves.append(MoveOp(o, "fast", 0, first_ref.get(o, 0),
-                                    size(o), 0.0))
+                                    size(o), 0.0, est_benefit=by[o].value))
         placements = [set(chosen)] * n
         return PlacementPlan("global", list(placements), moves,
-                             max(predicted, 0.0), graph.iteration_time())
+                             max(predicted, 0.0), graph.iteration_time(),
+                             emit_schedule(moves, graph, self.machine.copy_bw))
 
     # ----------------------------------------------------------- best of two
     def plan(self, graph: PhaseGraph, profiler: PhaseProfiler) -> PlacementPlan:

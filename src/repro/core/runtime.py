@@ -28,7 +28,8 @@ from . import initial as initial_mod
 from . import partition as partition_mod
 from .data_objects import DataObject, ObjectRegistry
 from .monitor import VariationMonitor
-from .mover import JaxTierBackend, ProactiveMover, TierBackend
+from .mover import (JaxTierBackend, ProactiveMover, SlackAwareMover,
+                    TierBackend)
 from .perfmodel import CalibrationConstants
 from .phase import Phase, PhaseGraph, PhaseKind, PhaseTraceEvent
 from .planner import PlacementPlan, Planner
@@ -46,6 +47,10 @@ class RuntimeConfig:
     drift_threshold: float = 0.10
     profile_iterations: int = 1
     seed: int = 0
+    # Migration engine: "slack" = slack-aware multi-channel scheduler (the
+    # overlap engine), "fifo" = the paper's single-queue phase-boundary mover.
+    mover: str = "slack"
+    copy_channels: int = 2          # concurrent copy channels ("slack" only)
 
 
 class UnimemRuntime:
@@ -101,12 +106,23 @@ class UnimemRuntime:
         self._iteration = 0
         self._profiling = True
         self.graph = PhaseGraph([Phase(i, n) for i, n in enumerate(phase_names)])
-        self.mover = ProactiveMover(self.registry, self.backend)
+        self.mover = self._make_mover()
         if self.config.enable_initial_placement and self._static_refs:
             placed = initial_mod.initial_placement(
                 self.registry, self._static_refs, self.capacity)
+            place = getattr(self.backend, "place", None)
             for name in placed:
-                self.backend.start_move(self.registry[name], "fast")
+                if place is not None:   # allocation-time placement: no copy
+                    place(self.registry[name], "fast")
+                else:
+                    self.backend.start_move(self.registry[name], "fast")
+
+    def _make_mover(self):
+        if self.config.mover == "slack":
+            return SlackAwareMover(self.registry, self.backend)
+        if self.config.mover == "fifo":
+            return ProactiveMover(self.registry, self.backend)
+        raise ValueError(f"unknown mover {self.config.mover!r}")
 
     def begin_iteration(self) -> None:
         self._events_this_iter = []
@@ -178,6 +194,8 @@ class UnimemRuntime:
         self._baseline_pending = True
         # Enact iteration-start moves for the global plan immediately.
         if self.mover is not None:
+            if hasattr(self.mover, "load_plan"):
+                self.mover.load_plan(self.plan, self.graph)
             self.mover.on_phase_start(self.plan, 0, len(self._phase_names))
 
     def _reprofile(self) -> None:
@@ -189,14 +207,23 @@ class UnimemRuntime:
     # ------------------------------------------------------------- reporting
     def stats(self) -> Dict[str, Any]:
         mv = self.mover.stats if self.mover else None
+        busy = getattr(self.backend, "busy_seconds", None)
+        copy_busy_s = busy() if busy is not None else None
+        overlap_time = None
+        if copy_busy_s and mv is not None:
+            overlap_time = max(0.0, 1.0 - mv.fence_stall_s / copy_busy_s)
         return dict(
             iteration=self._iteration,
             strategy=self.plan.strategy if self.plan else None,
             predicted_iteration_time=(self.plan.predicted_iteration_time
                                       if self.plan else None),
+            mover=self.config.mover,
             n_moves=mv.n_moves if mv else 0,
             moved_bytes=mv.moved_bytes if mv else 0,
             overlap_fraction=mv.overlap_fraction if mv else None,
+            fence_stall_s=mv.fence_stall_s if mv else 0.0,
+            copy_busy_s=copy_busy_s,
+            overlap_time_fraction=overlap_time,
             fast_resident_bytes=self.registry.bytes_in_tier("fast"),
             n_objects=len(self.registry),
         )

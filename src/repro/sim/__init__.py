@@ -1,13 +1,16 @@
 """Discrete-event tier simulator (Quartz-emulator analogue, paper §4)."""
 
-from .engine import (SimPhaseSpec, SimWorkload, SimulationEngine, SimResult,
-                     simulate_stream_time, simulate_chase_time)
+from .engine import (PhaseExec, SimPhaseSpec, SimWorkload, SimulationEngine,
+                     SimResult, simulate_stream_time, simulate_chase_time)
 from .workloads import (cg_like, ft_like, bt_like, lu_like, sp_like, mg_like,
-                        nek_like, NPB_WORKLOADS, lm_train_workload)
+                        nek_like, NPB_WORKLOADS, lm_train_workload,
+                        kv_serving, moe_expert_churn, graph_chase,
+                        SCENARIO_WORKLOADS)
 
 __all__ = [
-    "SimPhaseSpec", "SimWorkload", "SimulationEngine", "SimResult",
-    "simulate_stream_time", "simulate_chase_time",
+    "PhaseExec", "SimPhaseSpec", "SimWorkload", "SimulationEngine",
+    "SimResult", "simulate_stream_time", "simulate_chase_time",
     "cg_like", "ft_like", "bt_like", "lu_like", "sp_like", "mg_like",
     "nek_like", "NPB_WORKLOADS", "lm_train_workload",
+    "kv_serving", "moe_expert_churn", "graph_chase", "SCENARIO_WORKLOADS",
 ]

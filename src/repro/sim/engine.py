@@ -12,8 +12,13 @@ given placement is derived from each referenced object's access volume and
 An object's pattern mixes the two with ``stream_fraction`` — this reproduces
 the paper's Observation 3 (objects can be bandwidth-sensitive,
 latency-sensitive, or both).  Phase time = scalar compute + the serialized
-memory time of its objects.  The proactive mover's copies run on a FIFO copy
-engine (``SimTierBackend``); fence stalls land on the critical path.
+memory time of its objects.  Migration copies run on a simulated copy engine
+matched to the runtime's configured mover — the FIFO baseline
+(``SimTierBackend``, one serial queue) or the slack-aware scheduler's
+multi-channel engine (``ChannelSimBackend``, concurrent copies with
+bandwidth contention, tier flips only on landing).  Fence stalls land on the
+critical path only when slack is exhausted; every phase execution is
+recorded in a virtual-time trace (``PhaseExec``) for invariant checks.
 """
 
 from __future__ import annotations
@@ -22,7 +27,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from ..core.data_objects import ObjectRegistry
-from ..core.mover import SimTierBackend
+from ..core.mover import ChannelSimBackend, SimTierBackend
 from ..core.runtime import UnimemRuntime
 from ..core.tiers import MachineProfile
 
@@ -61,15 +66,39 @@ class SimWorkload:
 
 
 @dataclasses.dataclass
+class PhaseExec:
+    """One dynamic phase execution in virtual time (trace for tests)."""
+
+    iteration: int
+    phase_index: int
+    start: float                 # virtual time phase_begin was entered
+    stall_s: float               # fence stall absorbed before compute
+    duration_s: float            # phase execution time (post-stall)
+
+    @property
+    def compute_start(self) -> float:
+        return self.start + self.stall_s
+
+    @property
+    def end(self) -> float:
+        return self.start + self.stall_s + self.duration_s
+
+
+@dataclasses.dataclass
 class SimResult:
     iteration_times: List[float]
     total_time: float
     stats: Dict[str, object]
+    phase_trace: List[PhaseExec] = dataclasses.field(default_factory=list)
 
     @property
     def steady_iteration_time(self) -> float:
         tail = self.iteration_times[len(self.iteration_times) // 2:]
         return sum(tail) / len(tail)
+
+    @property
+    def total_stall_s(self) -> float:
+        return sum(p.stall_s for p in self.phase_trace)
 
 
 class SimulationEngine:
@@ -90,8 +119,14 @@ class SimulationEngine:
         if runtime is not None:
             self.runtime = runtime
             self.registry = runtime.registry
-            # swap in a simulated copy engine wired to our clock
-            backend = SimTierBackend(machine, lambda: self.clock)
+            # swap in a simulated copy engine wired to our clock, matching
+            # the runtime's configured migration engine
+            if runtime.config.mover == "slack":
+                backend = ChannelSimBackend(
+                    machine, lambda: self.clock,
+                    channels=runtime.config.copy_channels)
+            else:
+                backend = SimTierBackend(machine, lambda: self.clock)
             self.runtime.backend = backend
             if self.runtime.mover is not None:
                 self.runtime.mover.backend = backend
@@ -144,15 +179,18 @@ class SimulationEngine:
     # ------------------------------------------------------------------
     def run(self, n_iterations: int) -> SimResult:
         iter_times: List[float] = []
-        for _ in range(n_iterations):
+        trace: List[PhaseExec] = []
+        for it in range(n_iterations):
             t_iter = 0.0
             if self.runtime is not None:
                 self.runtime.begin_iteration()
             for i, ph in enumerate(self.workload.phases):
+                t_enter = self.clock
                 stall = 0.0
                 if self.runtime is not None:
                     stall = self.runtime.phase_begin(i)
                 t_phase, obj_times = self.phase_time(ph)
+                trace.append(PhaseExec(it, i, t_enter, stall, t_phase))
                 self.clock += stall + t_phase
                 t_iter += stall + t_phase
                 if self.runtime is not None:
@@ -169,7 +207,7 @@ class SimulationEngine:
                 self.runtime.end_iteration()
             iter_times.append(t_iter)
         stats = self.runtime.stats() if self.runtime is not None else {}
-        return SimResult(iter_times, sum(iter_times), stats)
+        return SimResult(iter_times, sum(iter_times), stats, trace)
 
 
 # ---------------------------------------------------------------------------

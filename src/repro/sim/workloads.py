@@ -255,6 +255,121 @@ NPB_WORKLOADS = {
 
 
 # ---------------------------------------------------------------------------
+# scenario matrix — steady-state migration-churn workloads for the
+# slack-aware async scheduler (beyond the paper's one-shot NPB placements).
+# Each scenario's per-phase hot set exceeds the fast tier, so movement
+# recurs every iteration and the mover's overlap quality shows up directly
+# in steady-state iteration time.
+# ---------------------------------------------------------------------------
+def kv_serving(scale: float = 1.0, n_blocks: int = 12, n_phases: int = 12,
+               window: int = 3) -> SimWorkload:
+    """Serving-style KV-cache growth: decode phases over a growing context.
+
+    One weights object is hot in every phase; the KV cache is two rings of
+    fixed-size blocks (keys and values) whose hot *window* — the blocks
+    holding the most recent tokens — slides one block per decode phase,
+    while long-context attention keeps touching the deep history lightly
+    (blocks three-to-five positions behind the window; the pair that just
+    left the window goes briefly cold, so it is evictable).  The window
+    plus weights exceed the fast tier, so every phase boundary pairs two
+    fetches (one K, one V block) with two evictions — the FIFO mover
+    serializes all four copies on the critical path; the slack scheduler
+    keeps evictions off the fence and runs the fetches on concurrent
+    channels."""
+    s = scale
+    blk = int(24 * MB * s)
+    objects: Dict[str, int] = {"w": int(96 * MB * s)}
+    for b in range(n_blocks):
+        objects[f"k{b:02d}"] = blk
+        objects[f"v{b:02d}"] = blk
+    phases: List[SimPhaseSpec] = []
+    for p in range(n_phases):
+        touches: Dict[str, SimObjectAccess] = {
+            "w": _acc(objects["w"], 1.0, 1.0)}
+        hot = [(p + k) % n_blocks for k in range(window)]
+        for b in hot:           # recent-token attention: bandwidth-bound
+            touches[f"k{b:02d}"] = _acc(blk, 4.0, 1.0)
+            touches[f"v{b:02d}"] = _acc(blk, 4.0, 1.0)
+        for back in range(3, 6):
+            b = (p - back) % n_blocks
+            if b not in hot:    # deep-history attention, cache-filtered
+                touches[f"k{b:02d}"] = _acc(blk, 0.1, 1.0)
+                touches[f"v{b:02d}"] = _acc(blk, 0.1, 1.0)
+        phases.append(SimPhaseSpec(f"decode{p}", 0.008, touches))
+    return SimWorkload("kv_serving", phases, objects)
+
+
+def moe_expert_churn(scale: float = 1.0, n_experts: int = 16,
+                     n_phases: int = 8) -> SimWorkload:
+    """MoE expert working-set churn: routed token groups activate a rotating
+    expert pair each phase.
+
+    Experts are only referenced in the phase that routes to them, so their
+    copy window spans nearly the whole iteration — but the fast tier only
+    holds four experts beside the shared trunk, so each boundary still
+    pairs two fetches with two evictions.  Expert GEMMs are mixed-
+    sensitivity (irregular token gather/scatter), the router table is pure
+    pointer chasing."""
+    s = scale
+    ex = int(40 * MB * s)
+    objects: Dict[str, int] = {"shared": int(64 * MB * s),
+                               "router": int(4 * MB * s)}
+    for e in range(n_experts):
+        objects[f"exp{e:02d}"] = ex
+    phases: List[SimPhaseSpec] = []
+    for p in range(n_phases):
+        touches: Dict[str, SimObjectAccess] = {
+            "shared": _acc(objects["shared"], 1.5, 1.0),
+            "router": _acc(objects["router"], 2.0, 0.0),
+        }
+        for e in ((2 * p) % n_experts, (2 * p + 1) % n_experts):
+            touches[f"exp{e:02d}"] = _acc(ex, 4.0, 0.35)
+        phases.append(SimPhaseSpec(f"route{p}", 0.012, touches))
+    return SimWorkload("moe_churn", phases, objects)
+
+
+def graph_chase(scale: float = 1.0) -> SimWorkload:
+    """Pointer-chasing graph analytics with two adjacency shards.
+
+    The frontier is dependent-load bound (pure chasing); the two adjacency
+    shards are large, chunkable, and each hot in its own gather phase — the
+    shard swap each iteration moves ~6 chunks through the copy engine, and
+    chunk-granular double buffering lets the gather consume early chunks
+    while later ones are still in flight."""
+    s = scale
+    objects = {
+        "frontier": int(16 * MB * s),
+        "visited": int(32 * MB * s),
+        "adjA": int(320 * MB * s),
+        "adjB": int(320 * MB * s),
+    }
+    o = objects
+    phases = [
+        SimPhaseSpec("gatherA", 0.020, {
+            "adjA": _acc(o["adjA"], 3.0, 0.85),
+            "frontier": _acc(o["frontier"], 0.5, 0.0),
+        }),
+        SimPhaseSpec("gatherB", 0.020, {
+            "adjB": _acc(o["adjB"], 3.0, 0.85),
+            "frontier": _acc(o["frontier"], 0.5, 0.0),
+        }),
+        SimPhaseSpec("apply", 0.008, {
+            "visited": _acc(o["visited"], 4.0, 0.6),
+            "frontier": _acc(o["frontier"], 1.0, 0.0),
+        }),
+    ]
+    return SimWorkload("graph_chase", phases, objects,
+                       chunkable={"adjA": True, "adjB": True})
+
+
+SCENARIO_WORKLOADS = {
+    "kv_serving": kv_serving,
+    "moe_churn": moe_expert_churn,
+    "graph_chase": graph_chase,
+}
+
+
+# ---------------------------------------------------------------------------
 def lm_train_workload(*, n_layers: int, layer_bytes: int, opt_bytes: int,
                       act_bytes: int, name: str = "lm",
                       layer_group: int = 4,

@@ -1,0 +1,112 @@
+"""Seeded property-check fallback for environments without ``hypothesis``.
+
+Provides ``given`` / ``settings`` decorators and an ``st`` strategy
+namespace that are call-compatible with the subset of the hypothesis API
+the test-suite uses (``integers``, ``floats``, ``lists``, ``tuples``).
+Cases are generated from a fixed-seed RNG, with boundary values injected
+first, so runs are deterministic and edge cases are always exercised.
+
+Usage in a test module::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:                      # fallback shim
+        from _propcheck import st, given, settings
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, List, Optional
+
+_SEED = 0x5EEDED
+
+
+class Strategy:
+    """A value generator: ``example(rng, i)`` draws case ``i``."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundaries: Optional[List[Any]] = None):
+        self._draw = draw
+        self.boundaries = boundaries or []
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        if i < len(self.boundaries):
+            return self.boundaries[i]
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    boundaries=[min_value, max_value])
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    bounds = [min_value, max_value]
+    if min_value <= 0.0 <= max_value:
+        bounds.append(0.0)
+    return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                    boundaries=bounds)
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng, len(elements.boundaries))
+                for _ in range(n)]
+    bounds: List[Any] = []
+    if min_size == 0:
+        bounds.append([])
+    bounds.append([elements.example(random.Random(_SEED), i)
+                   for i in range(min(max(min_size, 1), 3))])
+    return Strategy(draw, boundaries=bounds)
+
+
+def tuples(*element_strategies: Strategy) -> Strategy:
+    def draw(rng: random.Random):
+        return tuple(s.example(rng, len(s.boundaries))
+                     for s in element_strategies)
+    return Strategy(draw)
+
+
+st = types.SimpleNamespace(integers=integers, floats=floats, lists=lists,
+                           tuples=tuples)
+
+
+def settings(max_examples: int = 100, deadline: Any = None,
+             **_ignored: Any) -> Callable:
+    """Records ``max_examples`` on the test function for ``given``."""
+    def deco(fn: Callable) -> Callable:
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies: Strategy) -> Callable:
+    """Runs the test once per generated case (boundary cases first)."""
+    def deco(fn: Callable) -> Callable:
+        n_examples = getattr(fn, "_propcheck_max_examples", 100)
+
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kw: Any) -> None:
+            rng = random.Random(_SEED)
+            for i in range(n_examples):
+                drawn = {name: s.example(rng, i)
+                         for name, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (case {i}): {drawn!r}") from e
+
+        # hide the generated parameters from pytest's fixture resolution
+        params = [p for name, p in inspect.signature(fn).parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

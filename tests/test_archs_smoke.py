@@ -11,6 +11,8 @@ from repro.models import lm
 from repro.optim import AdamWConfig, init_opt_state
 from repro.train.step import build_train_step
 
+pytestmark = pytest.mark.slow      # jax-heavy model smoke: nightly tier
+
 B, S = 2, 32
 KEY = jax.random.PRNGKey(0)
 

@@ -1,7 +1,10 @@
 """Property tests for the 0/1 knapsack placement solver."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # no hypothesis: seeded shim
+    from _propcheck import st, given, settings
 
 from repro.core.knapsack import Item, solve, total_size, total_value
 

@@ -1,8 +1,12 @@
 """Unit + property tests for the paper's Eq. (1)-(5) performance models."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # no hypothesis: seeded shim
+    from _propcheck import st, given, settings
 
 from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, Sensitivity,
                         benefit, calibrate, classify, consumed_bandwidth,

@@ -1,7 +1,10 @@
 """Planner invariants: capacity, dependency-safe triggers, best-of-two."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # no hypothesis: seeded shim
+    from _propcheck import st, given, settings
 
 from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, PhaseProfiler,
                         Planner, build_phase_graph)

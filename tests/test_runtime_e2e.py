@@ -3,6 +3,8 @@ the paper's headline claims on our reproduction."""
 
 import pytest
 
+pytestmark = pytest.mark.slow      # full NPB sweep: nightly tier
+
 from repro.core import PAPER_DRAM_NVM, RuntimeConfig, UnimemRuntime, calibrate
 from repro.core.data_objects import ObjectRegistry
 from repro.sim import NPB_WORKLOADS, SimulationEngine

@@ -12,6 +12,8 @@ from repro.optim import AdamWConfig
 from repro.serve.engine import ServeEngine
 from repro.train.loop import TrainConfig, train
 
+pytestmark = pytest.mark.slow      # jax-heavy train/serve loop: nightly tier
+
 
 def test_train_loop_loss_decreases(tmp_path):
     cfg = get_config("yi-6b").reduced()
