@@ -1,0 +1,105 @@
+"""Benchmark regression gate (nightly CI).
+
+Re-runs are compared row-by-row against the committed CSVs under
+``benchmarks/results/``; the job fails when a watched metric regresses
+beyond its tolerance.
+
+* ``scenarios.csv`` — steady-state iteration times (virtual-time, hence
+  deterministic) normalized to DRAM-only: ``fifo``/``slack`` on the base
+  matrix, ``uniform``/``hotchunk`` on the skewed variants.  Higher is
+  worse; >5% regression fails.
+* ``planner_latency.csv`` — the legacy/vectorized ``speedup`` ratio (wall
+  clock, so machine-noisy: the ratio is compared at 50% tolerance) plus an
+  absolute floor: the 2,000-chunk row must stay >= 10x.
+
+Usage::
+
+    python -m benchmarks.check_regression --fresh fresh_scenarios.csv \
+        --baseline benchmarks/results/scenarios.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Dict, Tuple
+
+# watched metrics: prefix -> (keys, higher_is_worse, rel tolerance)
+WATCHES = {
+    "scenario_": (("fifo", "slack", "uniform", "hotchunk"), True, 0.05),
+    "planner_": (("speedup",), False, 0.50),
+}
+# absolute floors: (row prefix, key) -> minimum acceptable value
+FLOORS = {
+    ("planner_n2000", "speedup"): 10.0,
+}
+
+
+def parse(path: pathlib.Path) -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, Dict[str, float]] = {}
+    for line in path.read_text().splitlines():
+        if not line or line.startswith(("name,", "#")):
+            continue
+        name, _, derived = line.split(",", 2)
+        metrics: Dict[str, float] = {}
+        for kv in derived.split(";"):
+            if "=" not in kv:
+                continue
+            k, v = kv.split("=", 1)
+            try:
+                metrics[k] = float(v.rstrip("%x"))
+            except ValueError:
+                pass
+        rows[name] = metrics
+    return rows
+
+
+def check(fresh: pathlib.Path, baseline: pathlib.Path) -> int:
+    fresh_rows, base_rows = parse(fresh), parse(baseline)
+    failures = []
+    for name, base in sorted(base_rows.items()):
+        got = fresh_rows.get(name)
+        if got is None:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        for prefix, (keys, higher_is_worse, tol) in WATCHES.items():
+            if not name.startswith(prefix):
+                continue
+            for k in keys:
+                if k not in base:
+                    continue
+                if k not in got:
+                    failures.append(f"{name}: metric {k} missing")
+                    continue
+                b, f = base[k], got[k]
+                if higher_is_worse and f > b * (1 + tol):
+                    failures.append(
+                        f"{name}: {k} regressed {b:.4f} -> {f:.4f} "
+                        f"(> {tol:.0%} tolerance)")
+                elif not higher_is_worse and f < b * (1 - tol):
+                    failures.append(
+                        f"{name}: {k} regressed {b:.4f} -> {f:.4f} "
+                        f"(> {tol:.0%} tolerance)")
+        for (row, k), floor in FLOORS.items():
+            if name == row and got.get(k, floor) < floor:
+                failures.append(
+                    f"{name}: {k}={got.get(k):.2f} below absolute floor {floor}")
+    for msg in failures:
+        print(f"REGRESSION {msg}")
+    if not failures:
+        print(f"ok: {len(base_rows)} rows within tolerance "
+              f"({fresh.name} vs {baseline.name})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, type=pathlib.Path)
+    ap.add_argument("--baseline", required=True, type=pathlib.Path)
+    args = ap.parse_args()
+    sys.exit(check(args.fresh, args.baseline))
+
+
+if __name__ == "__main__":
+    main()

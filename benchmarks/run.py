@@ -10,22 +10,41 @@ figure-specific quantity (normalized slowdowns, overlap fractions, ...).
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
 
 from repro.core import PAPER_DRAM_NVM, calibrate
-from repro.sim import NPB_WORKLOADS, SCENARIO_WORKLOADS, lm_train_workload
+from repro.sim import (NPB_WORKLOADS, SCENARIO_WORKLOADS,
+                       SKEWED_SCENARIO_WORKLOADS, lm_train_workload)
 from repro.core.tiers import TPU_V5E
 
 from .common import (DEFAULT_DRAM, MB, run_static, run_unimem, run_xmen)
 
 ROWS = []
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+SAVE_RESULTS = False            # set by --save: refresh the committed CSVs
 
 
 def emit(name: str, us: float, derived: str) -> None:
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_rows(filename: str, prefix: str) -> None:
+    """With ``--save``, commit this run's rows matching ``prefix`` to
+    results/<filename> (the nightly-regression baselines); default runs
+    only print, so a casual local run never rewrites the committed CSVs."""
+    if not SAVE_RESULTS:
+        return
+    rows = [r for r in ROWS if r.startswith(prefix)]
+    if not rows:
+        return
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / filename
+    path.write_text("name,us_per_call,derived\n" + "\n".join(rows) + "\n")
+    print(f"# wrote {len(rows)} rows -> {path}", flush=True)
 
 
 # ---------------------------------------------------------------- Figs 2-3
@@ -238,6 +257,101 @@ def bench_scenarios() -> None:
              f"overlap_time={(s['overlap_time_fraction'] or 0):.2f};"
              f"strategy={s['strategy']}")
 
+    # skewed variants: hot-chunk pipeline (per-chunk attribution + skew-aware
+    # partitioning, chunk_aware=True) vs PR 1's uniform-attribution slack
+    # engine (chunk_aware=False) — both on the slack mover, same machine.
+    for wl_name, make in SKEWED_SCENARIO_WORKLOADS.items():
+        wl = make()
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        nvm = run_static(mach, wl, "slow")
+        uni, _ = run_unimem(mach, wl, drift_threshold=10.0, chunk_aware=False)
+        hot, hrt = run_unimem(mach, wl, drift_threshold=10.0, chunk_aware=True)
+        us = (time.perf_counter() - t0) * 1e6
+        d = dram.steady_iteration_time
+        s = hrt.stats()
+        n_chunks = sum(1 for o in hrt.registry if o.parent is not None)
+        emit(f"scenario_{wl_name}", us,
+             f"nvm={nvm.steady_iteration_time / d:.3f};"
+             f"uniform={uni.steady_iteration_time / d:.3f};"
+             f"hotchunk={hot.steady_iteration_time / d:.3f};"
+             f"speedup={uni.steady_iteration_time / hot.steady_iteration_time:.3f};"
+             f"overlap={s['overlap_fraction']:.2f};"
+             f"n_chunks={n_chunks};"
+             f"strategy={s['strategy']}")
+    write_rows("scenarios.csv", "scenario_")
+
+
+# ------------------------------ planner latency: vectorized vs pre-PR path
+def bench_planner() -> None:
+    """Plan-construction latency vs registry size.
+
+    Builds a registry of N chunks (10 partitioned parents, parent-level
+    profiles so every candidate exercises the chunk-attribution fallback —
+    the planner's hot path), then times ``Planner.plan`` in both modes:
+    ``legacy`` is the pre-optimization per-candidate scalar path with the
+    bool-matrix knapsack, ``vectorized`` the batched numpy path with the
+    packed-bitset knapsack.  Both produce identical plans."""
+    import random
+
+    from repro.core import (CalibrationConstants, PhaseProfiler, Planner,
+                            build_phase_graph)
+    from repro.core.data_objects import DataObject, ObjectRegistry
+    from repro.core.partition import resplit_refs
+    from repro.core.phase import PhaseTraceEvent
+
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+
+    def build(n_objs: int, n_phases: int = 12, seed: int = 0):
+        rng = random.Random(seed)
+        reg = ObjectRegistry()
+        n_parents = 10
+        per = n_objs // n_parents
+        for p in range(n_parents):
+            for k in range(per):
+                reg.register(DataObject(
+                    name=f"par{p}#{k}", size_bytes=rng.randint(1, 4) * MB,
+                    parent=f"par{p}", chunk_index=k))
+        refs, times = [], []
+        for _ in range(n_phases):
+            r = {f"par{p}": rng.uniform(1e5, 1e7) for p in range(10)
+                 if rng.random() < 0.7}
+            refs.append(r)
+            times.append(rng.uniform(0.01, 0.2))
+        graph = build_phase_graph(
+            [(f"ph{i}", rr) for i, rr in enumerate(refs)], times=times)
+        prof = PhaseProfiler(mach, seed=seed)
+        for i, rr in enumerate(refs):
+            prof.observe(PhaseTraceEvent(i, times[i], dict(rr)))
+        prof.annotate_graph(graph)
+        resplit_refs(graph, reg)    # parent refs -> size-fraction chunk refs
+        return reg, graph, prof
+
+    for n in (100, 500, 2000):
+        reg, graph, prof = build(n)
+        plans, lat = {}, {}
+        for mode, vec in (("vectorized", True), ("legacy", False)):
+            planner = Planner(mach, reg, CalibrationConstants(),
+                              DEFAULT_DRAM, vectorized=vec)
+            best = float("inf")
+            for _ in range(3 if n <= 500 else 2):
+                t0 = time.perf_counter()
+                plans[mode] = planner.plan(graph, prof)
+                best = min(best, time.perf_counter() - t0)
+            lat[mode] = best * 1e6
+        equal = (plans["vectorized"].moves == plans["legacy"].moves
+                 and plans["vectorized"].predicted_iteration_time
+                 == plans["legacy"].predicted_iteration_time)
+        if not equal:   # the oracle guarantee must hold at benchmark scale
+            raise RuntimeError(
+                f"vectorized plan diverged from the scalar oracle at n={n}")
+        emit(f"planner_n{n}", lat["vectorized"],
+             f"legacy_us={lat['legacy']:.0f};"
+             f"vectorized_us={lat['vectorized']:.0f};"
+             f"speedup={lat['legacy'] / lat['vectorized']:.1f};"
+             f"plans_equal={equal}")
+    write_rows("planner_latency.csv", "planner_")
+
 
 # ---------------------------------------------------------------- kernels
 def bench_kernels() -> None:
@@ -284,14 +398,20 @@ BENCHES = {
     "fig13": bench_dram_size,
     "lm_tiering": bench_lm_tiering,
     "scenarios": bench_scenarios,
+    "planner": bench_planner,
     "kernels": bench_kernels,
 }
 
 
 def main() -> None:
+    global SAVE_RESULTS
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--save", action="store_true",
+                    help="rewrite the committed baseline CSVs under "
+                         "benchmarks/results/ with this run")
     args = ap.parse_args()
+    SAVE_RESULTS = args.save
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:

@@ -56,3 +56,16 @@ class VariationMonitor:
         else:
             self._strikes[phase_index] = 0
         return None
+
+    def drifted_phases(self) -> List[int]:
+        """Phases with a pending (not-yet-consumed) drift event — a
+        diagnostic for tests and operators inspecting what triggered a
+        replan before ``consume_events`` clears it."""
+        return sorted({ev.phase_index for ev in self.events})
+
+    def consume_events(self) -> List[DriftEvent]:
+        """Return and clear the pending drift events (called when a replan
+        has been enacted, so stale events don't re-trigger it)."""
+        out = list(self.events)
+        self.events.clear()
+        return out

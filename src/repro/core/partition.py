@@ -1,25 +1,40 @@
-"""Large data object partitioning (paper §3.2 "Handling large data objects").
+"""Large data object partitioning (paper §3.2 "Handling large data objects"),
+extended with skew-aware repartitioning.
 
 An object larger than the fast tier can never be migrated whole.  The paper
-partitions *one-dimensional arrays with regular references* into chunks that
-are profiled and placed independently, and notes the trade-off: chunking adds
-movement frequency that is rarely hidden (only FT benefits in their suite).
+partitions *one-dimensional arrays with regular references* into equal chunks
+that are profiled and placed independently.  Equal chunks are the right
+answer only when references really are regular: under skewed access (graph
+adjacency with power-law degrees, KV caches with a sliding hot window) an
+even split smears the hot subset across every chunk and the knapsack can no
+longer pick just the hot head.
 
-``partition_object`` splits a registered object into equal chunks; payloads
-that are single 1-D JAX arrays are physically split, otherwise the chunks are
-logical byte-ranges (simulation objects).  The runtime decides *whether* to
-chunk via ``should_partition`` — the conservative policy from the paper.
+**Skew-aware partitioning** uses the profiler's measured per-object access
+histograms (``ObjectPhaseProfile.bin_weights``, sampled PEBS-style): the
+object's byte range is split by recursive bisection until each chunk's
+access density is near-uniform *in every profiled phase* (or a minimum chunk
+floor is hit), so chunk boundaries land on the access CDF's knees — small
+chunks over the hot head, coarse chunks over the cold tail.  Chunks larger
+than the conservative ``capacity/chunk_divisor`` ceiling are always split
+further, preserving the paper's policy as the uniform-access limit.
+
+``auto_partition`` decides per object: measured histograms -> skew-aware
+bisection; no histograms -> the paper's equal chunking.  ``resplit_refs``
+rewrites per-phase reference counts from the same measured histograms (per-
+chunk attribution), falling back to size fractions, and is re-run on every
+(re)plan so drifted access patterns re-attribute without re-partitioning.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
+import numpy as np
 
 from .data_objects import DataObject, ObjectRegistry
 from .phase import PhaseGraph
+from .profiler import PhaseProfiler
 
 
 def should_partition(obj: DataObject, fast_capacity: int,
@@ -29,68 +44,227 @@ def should_partition(obj: DataObject, fast_capacity: int,
     return obj.chunkable and obj.size_bytes > threshold * fast_capacity
 
 
+# ---------------------------------------------------------------------------
+# measured-histogram geometry
+# ---------------------------------------------------------------------------
+def bin_mass(weights: Sequence[float], lo_frac: float, hi_frac: float) -> float:
+    """Integral of the piecewise-constant access density described by
+    ``weights`` (relative weights over equal-width bins spanning [0, 1])
+    over the fractional byte range [lo_frac, hi_frac)."""
+    w = np.asarray(weights, dtype=np.float64)
+    total = w.sum()
+    if total <= 0.0 or w.size == 0:
+        return max(0.0, hi_frac - lo_frac)      # uniform fallback
+    b = w.size
+    lo = min(max(lo_frac, 0.0), 1.0) * b
+    hi = min(max(hi_frac, 0.0), 1.0) * b
+    if hi <= lo:
+        return 0.0
+    lo_i, hi_i = int(math.floor(lo)), int(math.ceil(hi))
+    mass = w[lo_i:hi_i].sum()
+    mass -= (lo - lo_i) * w[lo_i]                       # clip partial head
+    if hi_i > hi:
+        mass -= (hi_i - hi) * w[min(hi_i, b) - 1]       # clip partial tail
+    return float(max(mass, 0.0) / total)
+
+
+def chunk_spans(registry: ObjectRegistry, parent: str
+                ) -> List[Tuple[DataObject, int, int]]:
+    """Chunks of ``parent`` in index order with their [lo, hi) byte spans."""
+    chunks = sorted((o for o in registry if o.parent == parent),
+                    key=lambda o: o.chunk_index or 0)
+    out, acc = [], 0
+    for c in chunks:
+        out.append((c, acc, acc + c.size_bytes))
+        acc += c.size_bytes
+    return out
+
+
+def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
+                    *, coarse_bytes: int, min_chunk_bytes: int,
+                    tol: float = 0.15, max_chunks: int = 64) -> List[int]:
+    """Chunk boundaries from measured access histograms by recursive
+    bisection.
+
+    A segment is split while it exceeds ``coarse_bytes`` (the paper's
+    conservative ceiling — large chunks throttle the mover regardless of
+    skew), or while any profiled phase's access mass is imbalanced across
+    its midpoint by more than ``tol`` (relative to the segment's mass) and
+    both halves stay above ``min_chunk_bytes``.  Returns interior + end
+    boundaries: ``[b_1, ..., b_k, size_bytes]``.
+    """
+    bins = [np.asarray(b, dtype=np.float64) for b in phase_bins]
+    bins = [b for b in bins if b.size and b.sum() > 0.0]
+    max_depth = max(1, int(math.ceil(math.log2(max(max_chunks, 2)))))
+
+    def imbalance(lo: int, mid: int, hi: int) -> float:
+        worst = 0.0
+        for b in bins:
+            seg = bin_mass(b, lo / size_bytes, hi / size_bytes)
+            if seg <= 1e-12:
+                continue
+            left = bin_mass(b, lo / size_bytes, mid / size_bytes)
+            worst = max(worst, abs(2.0 * left - seg) / seg)
+        return worst
+
+    bounds: List[int] = []
+
+    def rec(lo: int, hi: int, depth: int) -> None:
+        size = hi - lo
+        mid = lo + size // 2
+        must = size > coarse_bytes
+        may = (size >= 2 * min_chunk_bytes and depth < max_depth
+               and imbalance(lo, mid, hi) > tol)
+        if (must or may) and mid > lo and mid < hi:
+            rec(lo, mid, depth + 1)
+            rec(mid, hi, depth + 1)
+        else:
+            bounds.append(hi)
+
+    rec(0, size_bytes, 0)
+    return bounds
+
+
+# ---------------------------------------------------------------------------
+# physical / logical splitting
+# ---------------------------------------------------------------------------
+def partition_object_spans(registry: ObjectRegistry, name: str,
+                           boundaries: Sequence[int]) -> List[DataObject]:
+    """Split ``name`` into chunks at the given byte ``boundaries`` (strictly
+    increasing, ending at the object's size), replacing it in the registry."""
+    obj = registry[name]
+    bounds = list(boundaries)
+    if not bounds or bounds[-1] != obj.size_bytes:
+        raise ValueError("boundaries must end at the object's size")
+    if any(b2 <= b1 for b1, b2 in zip([0] + bounds, bounds)):
+        raise ValueError("boundaries must be strictly increasing")
+    if len(bounds) == 1:
+        return [obj]
+
+    n_chunks = len(bounds)
+    payloads: List[Optional[object]] = [None] * n_chunks
+    if obj.payload is not None and hasattr(obj.payload, "ndim") \
+            and getattr(obj.payload, "ndim", 0) == 1:
+        arr = obj.payload
+        n_el = arr.shape[0]
+        cuts = [0] + [round(b * n_el / obj.size_bytes) for b in bounds]
+        cuts[-1] = n_el
+        payloads = [arr[cuts[i]:cuts[i + 1]] for i in range(n_chunks)]
+
+    chunks = []
+    lo = 0
+    for i, hi in enumerate(bounds):
+        chunks.append(registry.register(DataObject(
+            name=f"{name}#{i}", size_bytes=hi - lo, chunkable=False,
+            payload=payloads[i], parent=name, chunk_index=i,
+            tier=obj.tier, pinned=obj.pinned)))
+        lo = hi
+    registry.remove(name)
+    return chunks
+
+
 def partition_object(registry: ObjectRegistry, name: str,
                      chunk_bytes: int) -> List[DataObject]:
-    """Split ``name`` into ceil(size/chunk_bytes) chunks, replacing it."""
+    """Split ``name`` into ceil(size/chunk_bytes) equal chunks (the paper's
+    regular-reference policy), replacing it."""
     obj = registry[name]
     if chunk_bytes <= 0:
         raise ValueError("chunk_bytes must be positive")
     n_chunks = max(1, math.ceil(obj.size_bytes / chunk_bytes))
     if n_chunks == 1:
         return [obj]
-
-    payloads: List[Optional[object]] = [None] * n_chunks
-    if obj.payload is not None and hasattr(obj.payload, "ndim") \
-            and getattr(obj.payload, "ndim", 0) == 1:
-        arr = obj.payload
-        per = math.ceil(arr.shape[0] / n_chunks)
-        payloads = [arr[i * per:(i + 1) * per] for i in range(n_chunks)]
-
-    chunks = []
-    remaining = obj.size_bytes
-    for i in range(n_chunks):
-        sz = min(chunk_bytes, remaining)
-        remaining -= sz
-        chunks.append(registry.register(DataObject(
-            name=f"{name}#{i}", size_bytes=sz, chunkable=False,
-            payload=payloads[i], parent=name, chunk_index=i,
-            tier=obj.tier, pinned=obj.pinned)))
-    registry.remove(name)
-    return chunks
+    bounds = [min((i + 1) * chunk_bytes, obj.size_bytes)
+              for i in range(n_chunks)]
+    return partition_object_spans(registry, name, bounds)
 
 
-def split_refs_to_chunks(graph: PhaseGraph, name: str, chunks: List[DataObject],
-                         per_chunk_refs: Optional[Dict[int, Dict[int, float]]] = None
-                         ) -> None:
-    """Rewrite phase reference counts of a partitioned object.
+# ---------------------------------------------------------------------------
+# reference attribution
+# ---------------------------------------------------------------------------
+def resplit_refs(graph: PhaseGraph, registry: ObjectRegistry,
+                 profiler: Optional[PhaseProfiler] = None) -> None:
+    """Re-attribute every partitioned parent's per-phase reference counts to
+    its chunks, using the profiler's measured histograms when available
+    (falling back to size fractions).
 
-    ``per_chunk_refs``: optional {phase_index: {chunk_index: accesses}} from
-    chunk-aware profiling; defaults to an even split (regular references)."""
-    n = len(chunks)
-    for ph in graph:
-        if name not in ph.refs:
+    Safe to call on every (re)plan: ``annotate_graph`` re-writes parent-name
+    reference counts from the (parent-keyed) profiles, and this pass splits
+    them back down to chunk granularity with the freshest attribution.
+    """
+    parents = sorted({o.parent for o in registry if o.parent is not None})
+    for parent in parents:
+        spans = chunk_spans(registry, parent)
+        if not spans:
             continue
-        total = ph.refs.pop(name)
-        if per_chunk_refs and ph.index in per_chunk_refs:
-            dist = per_chunk_refs[ph.index]
-            s = sum(dist.values()) or 1.0
-            for c in chunks:
-                ph.refs[c.name] = total * dist.get(c.chunk_index, 0.0) / s
-        else:
-            for c in chunks:
-                ph.refs[c.name] = total / n
+        total_bytes = sum(c.size_bytes for c, _, _ in spans) or 1
+        for ph in graph:
+            if parent not in ph.refs:
+                # A parent that was profiled but faded below annotate_graph's
+                # one-access floor has no ref key anymore — its chunks are
+                # unreferenced too, so stale attribution from an earlier
+                # build must not linger (it would shield the cold chunks
+                # from eviction forever).
+                if (profiler is not None
+                        and profiler.profile(ph.index, parent) is not None):
+                    for c, _, _ in spans:
+                        ph.refs.pop(c.name, None)
+                continue
+            total = ph.refs.pop(parent)
+            for c, _, _ in spans:           # drop stale chunk attribution
+                ph.refs.pop(c.name, None)
+            bins = None
+            if profiler is not None:
+                prof = profiler.profile(ph.index, parent)
+                if prof is not None:
+                    bins = prof.bin_weights
+            if bins is None:
+                for c, lo, hi in spans:
+                    ph.refs[c.name] = total * c.size_bytes / total_bytes
+            else:
+                masses = [bin_mass(bins, lo / total_bytes, hi / total_bytes)
+                          for _, lo, hi in spans]
+                norm = sum(masses) or 1.0
+                for (c, _, _), m in zip(spans, masses):
+                    r = total * m / norm
+                    if r > 0.0:
+                        # a zero-access chunk is unreferenced this phase; a
+                        # 0.0 entry would still count as a reference (dict
+                        # membership) and shield the chunk from eviction
+                        ph.refs[c.name] = r
 
 
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
 def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
-                   fast_capacity: int, *, chunk_divisor: int = 4) -> List[str]:
-    """Apply the conservative policy: chunk each chunkable object that cannot
-    fit the fast tier into ``capacity/chunk_divisor``-byte chunks."""
+                   fast_capacity: int, *, chunk_divisor: int = 4,
+                   profiler: Optional[PhaseProfiler] = None,
+                   skew_aware: bool = True,
+                   max_chunks: int = 64) -> List[str]:
+    """Chunk each chunkable object that cannot fit the fast tier.
+
+    With measured per-object histograms (``profiler`` given and the object
+    observed with per-chunk attribution) and ``skew_aware``, boundaries come
+    from :func:`skew_boundaries`; otherwise the paper's conservative equal
+    split into ``capacity/chunk_divisor``-byte chunks.  Per-phase references
+    are re-attributed from the same histograms (:func:`resplit_refs`)."""
+    coarse = max(1, fast_capacity // chunk_divisor)
     partitioned = []
     for name in list(registry.names()):
         obj = registry[name]
-        if should_partition(obj, fast_capacity):
-            chunk_bytes = max(1, fast_capacity // chunk_divisor)
-            chunks = partition_object(registry, name, chunk_bytes)
-            split_refs_to_chunks(graph, name, chunks)
+        if not should_partition(obj, fast_capacity):
+            continue
+        phase_bins = (list(profiler.object_bins(name).values())
+                      if profiler is not None else [])
+        if skew_aware and phase_bins:
+            bounds = skew_boundaries(
+                obj.size_bytes, phase_bins, coarse_bytes=coarse,
+                min_chunk_bytes=max(coarse // 16, 1), max_chunks=max_chunks)
+            chunks = partition_object_spans(registry, name, bounds)
+        else:
+            chunks = partition_object(registry, name, coarse)
+        if len(chunks) > 1:
             partitioned.append(name)
+    if partitioned:
+        resplit_refs(graph, registry, profiler)
     return partitioned

@@ -48,7 +48,7 @@ def consumed_bandwidth(p: ObjectPhaseProfile, machine: MachineProfile) -> float:
     denom = frac * p.phase_time
     if denom <= 0.0:
         return 0.0
-    return (p.data_access * machine.cacheline_bytes) / denom
+    return p.accessed_bytes / denom
 
 
 def classify(p: ObjectPhaseProfile, machine: MachineProfile,
@@ -68,7 +68,7 @@ def classify(p: ObjectPhaseProfile, machine: MachineProfile,
 # --------------------------------------------------------------------------
 def benefit_bw(p: ObjectPhaseProfile, machine: MachineProfile,
                cf: CalibrationConstants) -> float:
-    accessed = p.data_access * machine.cacheline_bytes
+    accessed = p.accessed_bytes
     return (accessed / machine.slow.bw - accessed / machine.fast.bw) * cf.cf_bw
 
 
@@ -88,6 +88,35 @@ def benefit(p: ObjectPhaseProfile, machine: MachineProfile,
     if s is Sensitivity.LATENCY:
         return benefit_lat(p, machine, cf)
     return max(benefit_bw(p, machine, cf), benefit_lat(p, machine, cf))
+
+
+def benefit_batch(data_access, n_samples, samples_with_access, phase_time,
+                  cacheline_bytes, machine: MachineProfile,
+                  cf: CalibrationConstants):
+    """Vectorized Eq. (1)-(3): classification + benefit for N profiles at
+    once (the planner's hot path at chunk counts in the thousands).
+
+    Element-for-element this performs the same float64 operations as the
+    scalar :func:`benefit` path, so the two agree bitwise.
+    """
+    import numpy as np
+
+    da = np.asarray(data_access, dtype=np.float64)
+    ns = np.asarray(n_samples, dtype=np.float64)
+    swa = np.asarray(samples_with_access, dtype=np.float64)
+    pt = np.asarray(phase_time, dtype=np.float64)
+    line = np.asarray(cacheline_bytes, dtype=np.float64)
+
+    accessed = da * line
+    denom = (swa / np.maximum(ns, 1.0)) * pt
+    with np.errstate(divide="ignore", invalid="ignore"):
+        bw = np.where(denom > 0.0, accessed / denom, 0.0)
+    bft_bw = (accessed / machine.slow.bw - accessed / machine.fast.bw) * cf.cf_bw
+    bft_lat = (da * machine.slow.lat - da * machine.fast.lat) * cf.cf_lat
+    peak = machine.bw_peak
+    return np.where(bw >= T1_BANDWIDTH * peak, bft_bw,
+                    np.where(bw < T2_LATENCY * peak, bft_lat,
+                             np.maximum(bft_bw, bft_lat)))
 
 
 # --------------------------------------------------------------------------

@@ -129,6 +129,12 @@ class PhaseTraceEvent:
     # accesses (what PEBS's per-object sample fraction measures); optional —
     # the profiler falls back to access-count shares.
     time_shares: Optional[Dict[str, float]] = None
+    # true access distribution over each object's byte range (relative
+    # weights over equal-width bins — the address histogram a PEBS sample
+    # stream would bin); optional — objects without an entry are profiled at
+    # object granularity only.  The profiler resamples these with seeded
+    # multinomial noise (per-chunk attribution, paper §3.2 extended).
+    access_bins: Optional[Dict[str, Sequence[float]]] = None
 
 
 def build_phase_graph(

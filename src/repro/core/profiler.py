@@ -1,4 +1,4 @@
-"""Online phase profiling (paper §3.1.1).
+"""Online phase profiling (paper §3.1.1) with per-chunk attribution.
 
 The paper samples last-level-cache-miss events (PEBS/IBS) during the first
 iteration and attributes sampled memory addresses to target data objects.
@@ -14,6 +14,25 @@ true counts into *sampled observations*:
 * ``data_access``      : access count estimated from the sampled subset
 
 A deterministic seeded RNG injects the sampling noise.
+
+**Per-chunk attribution** extends the sampling model below object
+granularity: when the instrumentation reports how an object's accesses
+distribute over its byte range (``PhaseTraceEvent.access_bins`` — the
+address histogram a PEBS sample stream would produce), each sample that hit
+the object also "records an address", i.e. lands in one of B equal-width
+bins.  The profiler draws those bin hits from a seeded multinomial over the
+true distribution, so the measured histogram carries realistic sampling
+noise that shrinks as more samples accumulate.  Downstream, the skew-aware
+partitioner (``partition.skew_boundaries``) and the planner's chunk
+fallback read the measured histogram instead of assuming uniform density.
+
+**Accumulation** is a running (weighted) mean: observing the same
+(phase, object) across ``profile_iterations > 1`` iterations folds each new
+observation into the stored profile instead of overwriting it, so
+multi-iteration profiling actually reduces sampling noise.  ``decay``
+down-weights the accumulated history, letting fresh observations dominate —
+the incremental-replan path uses it so a drifted workload re-profiles
+without throwing the old plan away.
 """
 
 from __future__ import annotations
@@ -26,10 +45,21 @@ import numpy as np
 from .phase import PhaseGraph, PhaseTraceEvent
 from .tiers import MachineProfile
 
+#: cap on multinomial draws per (phase, object) observation — beyond this the
+#: histogram is effectively converged and more draws only cost time
+MAX_BIN_DRAWS = 1 << 16
+
 
 @dataclasses.dataclass
 class ObjectPhaseProfile:
-    """Profiler output for one (phase, object) pair — inputs to Eq. (1)."""
+    """Profiler output for one (phase, object) pair — inputs to Eq. (1).
+
+    Values are running means over every folded observation (``weight``
+    observations so far, possibly fractional after :meth:`PhaseProfiler.decay`).
+    ``bin_counts`` accumulates sampled address->bin hits across observations;
+    ``bin_weights`` is the normalized histogram (None when the object was
+    never observed with per-chunk attribution).
+    """
 
     phase_index: int
     obj: str
@@ -37,10 +67,26 @@ class ObjectPhaseProfile:
     n_samples: float            # #samples
     samples_with_access: float  # #samples_with_data_accesses
     phase_time: float           # seconds
+    cacheline_bytes: float = 64.0   # machine.cacheline_bytes at observation
+    bin_counts: Optional[np.ndarray] = None
+    weight: float = 1.0         # observations folded into the running means
 
     @property
     def accessed_bytes(self) -> float:
-        raise NotImplementedError  # needs cacheline size; see perfmodel
+        """Bytes this object moved through main memory in the phase
+        (Eq. (1)-(2) numerator: #data_access x cacheline)."""
+        return self.data_access * self.cacheline_bytes
+
+    @property
+    def bin_weights(self) -> Optional[np.ndarray]:
+        """Normalized measured access histogram over the object's byte range,
+        or None when no per-chunk attribution was ever observed."""
+        if self.bin_counts is None:
+            return None
+        total = float(self.bin_counts.sum())
+        if total <= 0.0:
+            return None
+        return self.bin_counts / total
 
 
 class PhaseProfiler:
@@ -51,16 +97,26 @@ class PhaseProfiler:
         self.machine = machine
         self.noise = noise
         self._rng = np.random.default_rng(seed)
-        # accumulated observations: (phase, obj) -> list of profiles
+        # accumulated observations: (phase, obj) -> running-mean profile
         self._acc: Dict[int, Dict[str, ObjectPhaseProfile]] = {}
+        # phase -> (running mean time, accumulated weight)
         self._times: Dict[int, List[float]] = {}
 
     # -- ingestion -----------------------------------------------------------
     def observe(self, ev: PhaseTraceEvent) -> None:
-        """Ingest one dynamic phase execution (one loop iteration's phase)."""
+        """Ingest one dynamic phase execution (one loop iteration's phase).
+
+        Repeat observations of the same (phase, object) fold into a running
+        mean (weighted by prior accumulation) rather than clobbering the
+        stored profile."""
         n_samples = max(ev.time * self.machine.sample_rate_hz, 1.0)
         prof_map = self._acc.setdefault(ev.phase_index, {})
-        self._times.setdefault(ev.phase_index, []).append(ev.time)
+        tm = self._times.get(ev.phase_index)
+        if tm is None:
+            self._times[ev.phase_index] = [ev.time, 1.0]
+        else:
+            tm[1] += 1.0
+            tm[0] += (ev.time - tm[0]) / tm[1]
         total_access = sum(ev.accesses.values())
         for obj, true_access in ev.accesses.items():
             if true_access <= 0:
@@ -80,12 +136,61 @@ class PhaseProfiler:
             jitter = float(np.clip(jitter, 0.5, 1.5))
             observed = true_access * jitter
             hit_frac = min(1.0, share * jitter)
-            prof_map[obj] = ObjectPhaseProfile(
-                phase_index=ev.phase_index, obj=obj,
-                data_access=observed,
-                n_samples=n_samples,
-                samples_with_access=max(hit_frac * n_samples, 1.0),
-                phase_time=ev.time)
+            swa = max(hit_frac * n_samples, 1.0)
+            counts = None
+            if ev.access_bins is not None and obj in ev.access_bins:
+                counts = self._sample_bins(ev.access_bins[obj], swa)
+            prev = prof_map.get(obj)
+            if prev is None:
+                prof_map[obj] = ObjectPhaseProfile(
+                    phase_index=ev.phase_index, obj=obj,
+                    data_access=observed,
+                    n_samples=n_samples,
+                    samples_with_access=swa,
+                    phase_time=ev.time,
+                    cacheline_bytes=float(self.machine.cacheline_bytes),
+                    bin_counts=counts)
+            else:
+                w = prev.weight + 1.0
+                prev.data_access += (observed - prev.data_access) / w
+                prev.n_samples += (n_samples - prev.n_samples) / w
+                prev.samples_with_access += (swa - prev.samples_with_access) / w
+                prev.phase_time += (ev.time - prev.phase_time) / w
+                prev.weight = w
+                if counts is not None:
+                    if prev.bin_counts is None:
+                        prev.bin_counts = counts
+                    elif len(prev.bin_counts) == len(counts):
+                        prev.bin_counts = prev.bin_counts + counts
+                    else:       # instrumentation changed its bin resolution
+                        prev.bin_counts = counts
+        # An execution where a previously-profiled object had *no* accesses
+        # is a real observation of zero — fold it in, so objects that go
+        # cold actually fade from the profile (without this, a drifted
+        # workload's stale hot set would survive re-profiling forever).
+        for obj, prev in prof_map.items():
+            if ev.accesses.get(obj, 0.0) > 0:
+                continue
+            w = prev.weight + 1.0
+            prev.data_access += (0.0 - prev.data_access) / w
+            prev.n_samples += (n_samples - prev.n_samples) / w
+            prev.samples_with_access += (0.0 - prev.samples_with_access) / w
+            prev.phase_time += (ev.time - prev.phase_time) / w
+            prev.weight = w
+
+    def _sample_bins(self, true_weights, swa: float) -> Optional[np.ndarray]:
+        """Sampled address->bin histogram: each sample that hit the object
+        records an address; addresses land in bins proportionally to the true
+        access distribution (the PEBS event stream, with multinomial noise)."""
+        w = np.asarray(true_weights, dtype=np.float64)
+        if w.ndim != 1 or w.size == 0:
+            return None
+        w = np.clip(w, 0.0, None)
+        total = w.sum()
+        if total <= 0.0:
+            return None
+        draws = int(min(max(swa, 8.0), MAX_BIN_DRAWS))
+        return self._rng.multinomial(draws, w / total).astype(np.float64)
 
     def observe_iteration(self, events: Iterable[PhaseTraceEvent]) -> None:
         for ev in events:
@@ -99,17 +204,51 @@ class PhaseProfiler:
         return dict(self._acc.get(phase_index, {}))
 
     def phase_time(self, phase_index: int) -> float:
-        ts = self._times.get(phase_index)
-        return float(np.mean(ts)) if ts else 0.0
+        tm = self._times.get(phase_index)
+        return float(tm[0]) if tm else 0.0
+
+    def object_bins(self, obj: str) -> Dict[int, np.ndarray]:
+        """Measured per-phase access histograms for ``obj`` (phases where the
+        object was observed with per-chunk attribution only)."""
+        out: Dict[int, np.ndarray] = {}
+        for phase_index, prof_map in self._acc.items():
+            p = prof_map.get(obj)
+            if p is not None:
+                w = p.bin_weights
+                if w is not None:
+                    out[phase_index] = w
+        return out
 
     def annotate_graph(self, graph: PhaseGraph) -> None:
-        """Write measured times + access counts back into the phase graph."""
+        """Write measured times + access counts back into the phase graph.
+
+        An object whose folded mean has faded below one access is treated as
+        *unreferenced* by the phase (its ref entry is dropped): a lingering
+        epsilon ref would still count as a reference and e.g. shield a
+        gone-cold object from eviction forever."""
         for p in graph:
             t = self.phase_time(p.index)
             if t > 0:
                 p.time = t
             for obj, prof in self.profiles_for_phase(p.index).items():
-                p.refs[obj] = prof.data_access
+                if prof.data_access >= 1.0:
+                    p.refs[obj] = prof.data_access
+                else:
+                    p.refs.pop(obj, None)
+
+    def decay(self, factor: float = 0.25) -> None:
+        """Down-weight accumulated history so subsequent observations dominate
+        the running means (incremental replanning: reuse the old profiles as a
+        prior instead of throwing them away)."""
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError("decay factor must be in [0, 1]")
+        for prof_map in self._acc.values():
+            for p in prof_map.values():
+                p.weight *= factor
+                if p.bin_counts is not None:
+                    p.bin_counts = p.bin_counts * factor
+        for tm in self._times.values():
+            tm[1] *= factor
 
     def clear(self) -> None:
         self._acc.clear()

@@ -15,6 +15,26 @@ Workflow (paper §3.1): iteration 1 profiles each phase; at its end the
 planner builds a placement plan (best of phase-local / cross-phase-global);
 from iteration 2 on the proactive mover enforces the plan, and the variation
 monitor re-triggers profiling when a phase drifts >10%.
+
+**Incremental replanning** (beyond the paper): when the monitor fires, the
+runtime does *not* throw the plan away and serve unplaced iterations while
+it re-profiles.  Instead it keeps executing the current plan, down-weights
+the accumulated profiles (:meth:`PhaseProfiler.decay`) so the next profiled
+iterations dominate, and then rebuilds the plan from the *current* registry
+tier state — the planner's initial residents are whatever the old plan left
+in the fast tier, so the emitted moves are exactly the diff between the old
+and new placements.  Once a first plan exists, ``self.plan`` is never None
+again.
+
+**Per-chunk attribution** (``RuntimeConfig.chunk_aware``): instrumentation
+may report each object's access distribution over its byte range
+(``phase_end(..., access_bins=...)``).  The profiler resamples it with
+seeded multinomial noise; ``auto_partition`` then splits chunkable objects
+along the measured access CDF (skew-aware bisection) and per-phase chunk
+reference counts come from histogram mass rather than uniform size
+fractions — so the knapsack can pick exactly the hot head of a skewed
+object.  With ``chunk_aware=False`` the runtime reproduces the paper's
+object-granularity profiling and equal chunking.
 """
 
 from __future__ import annotations
@@ -22,7 +42,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time as _time
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 from . import initial as initial_mod
 from . import partition as partition_mod
@@ -51,6 +71,18 @@ class RuntimeConfig:
     # overlap engine), "fifo" = the paper's single-queue phase-boundary mover.
     mover: str = "slack"
     copy_channels: int = 2          # concurrent copy channels ("slack" only)
+    # Hot-chunk placement pipeline: ingest per-chunk attribution
+    # (access_bins), partition along the measured access CDF, attribute
+    # chunk references from histogram mass.  False reproduces the paper's
+    # object-granularity profiling + equal chunking.
+    chunk_aware: bool = True
+    # Drift response: keep serving the current plan while re-profiling, then
+    # emit only the diff moves.  False restores the paper's full reset
+    # (plan dropped, iterations served unplaced until re-profiled).
+    incremental_replan: bool = True
+    # How much accumulated profile weight survives a drift event (0 = start
+    # from scratch, 1 = new observations barely move the running means).
+    replan_decay: float = 0.25
 
 
 class UnimemRuntime:
@@ -76,8 +108,11 @@ class UnimemRuntime:
         self._iteration = 0
         self._events_this_iter: List[PhaseTraceEvent] = []
         self._profiling = True
+        self._profiled_iters = 0
         self._baseline_pending = False
         self._static_refs: Dict[str, float] = {}
+        self.n_replans = 0              # drift-triggered replan cycles
+        self.n_incremental_replans = 0  # ... served without dropping the plan
 
     # ------------------------------------------------------------- allocation
     def alloc(self, name: str, *, size_bytes: Optional[int] = None,
@@ -105,6 +140,7 @@ class UnimemRuntime:
         self._static_refs.update(static_refs or {})
         self._iteration = 0
         self._profiling = True
+        self._profiled_iters = 0
         self.graph = PhaseGraph([Phase(i, n) for i, n in enumerate(phase_names)])
         self.mover = self._make_mover()
         if self.config.enable_initial_placement and self._static_refs:
@@ -138,13 +174,20 @@ class UnimemRuntime:
 
     def phase_end(self, index: int, *, elapsed: float,
                   accesses: Optional[Dict[str, float]] = None,
-                  time_shares: Optional[Dict[str, float]] = None) -> None:
+                  time_shares: Optional[Dict[str, float]] = None,
+                  access_bins: Optional[Dict[str, Sequence[float]]] = None
+                  ) -> None:
         """Leave phase ``index``.  ``accesses`` are the true per-object
         main-memory access counts for this execution (the instrumentation the
-        paper gets from PEBS sampling)."""
+        paper gets from PEBS sampling); ``access_bins`` optionally carries
+        each object's access distribution over its byte range (per-chunk
+        attribution — the sampled address histogram)."""
+        if not self.config.chunk_aware:
+            access_bins = None
         ev = PhaseTraceEvent(phase_index=index, time=elapsed,
                              accesses=dict(accesses or {}),
-                             time_shares=time_shares)
+                             time_shares=time_shares,
+                             access_bins=access_bins)
         self._events_this_iter.append(ev)
         if self._profiling:
             self.profiler.observe(ev)
@@ -172,16 +215,31 @@ class UnimemRuntime:
 
     def end_iteration(self) -> None:
         self._iteration += 1
-        if self._profiling and self._iteration >= self.config.profile_iterations:
-            self._build_plan()
-            self._profiling = False
+        if self._profiling:
+            self._profiled_iters += 1
+            if self._profiled_iters >= self.config.profile_iterations:
+                self._build_plan()
+                self._profiling = False
+                self._profiled_iters = 0
 
     # ------------------------------------------------------------- internals
     def _build_plan(self) -> None:
         assert self.graph is not None
         self.profiler.annotate_graph(self.graph)
         if self.config.enable_partitioning:
-            partition_mod.auto_partition(self.registry, self.graph, self.capacity)
+            newly = partition_mod.auto_partition(
+                self.registry, self.graph, self.capacity,
+                profiler=self.profiler,
+                skew_aware=self.config.chunk_aware)
+            if not newly:
+                # Replan with parents partitioned on an earlier build:
+                # annotate_graph just rewrote parent-name refs from the
+                # parent-keyed profiles, so re-attribute them to chunks with
+                # the freshest histograms.  (auto_partition already did this
+                # for anything it partitioned; without chunk_aware the
+                # profiler has no histograms and size fractions apply.)
+                partition_mod.resplit_refs(self.graph, self.registry,
+                                           self.profiler)
         plans = []
         if self.config.enable_local_search:
             plans.append(self.planner.plan_local(self.graph, self.profiler))
@@ -192,17 +250,37 @@ class UnimemRuntime:
             return
         self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
         self._baseline_pending = True
-        # Enact iteration-start moves for the global plan immediately.
+        self.monitor.consume_events()
+        # Enact iteration-start moves for the new plan immediately.
         if self.mover is not None:
             if hasattr(self.mover, "load_plan"):
                 self.mover.load_plan(self.plan, self.graph)
             self.mover.on_phase_start(self.plan, 0, len(self._phase_names))
 
     def _reprofile(self) -> None:
-        self.profiler.clear()
-        self._profiling = True
-        self.plan = None
-        self._iteration = 0
+        """Drift response.  Incremental (default): keep serving the current
+        plan, decay the profile history so fresh observations dominate, and
+        rebuild from the live tier state when enough iterations re-profiled —
+        the plan is never dropped, so no iteration runs unplaced.  Legacy:
+        the paper's full reset."""
+        self.n_replans += 1
+        if self.config.incremental_replan and self.plan is not None:
+            self.n_incremental_replans += 1
+            self.profiler.decay(self.config.replan_decay)
+            self._profiling = True
+            self._profiled_iters = 0
+        else:
+            self.profiler.clear()
+            self._profiling = True
+            self._profiled_iters = 0
+            self.plan = None
+            self._iteration = 0
+        # Drift fires mid-iteration: the phases already executed this
+        # iteration (including the drifted one) were routed to the monitor,
+        # not the profiler — replay them so the re-profiling window covers
+        # the full iteration, not just the phases after the drift.
+        for ev in self._events_this_iter:
+            self.profiler.observe(ev)
 
     # ------------------------------------------------------------- reporting
     def stats(self) -> Dict[str, Any]:
@@ -226,4 +304,6 @@ class UnimemRuntime:
             overlap_time_fraction=overlap_time,
             fast_resident_bytes=self.registry.bytes_in_tier("fast"),
             n_objects=len(self.registry),
+            n_replans=self.n_replans,
+            n_incremental_replans=self.n_incremental_replans,
         )

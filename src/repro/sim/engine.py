@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence
 
 from ..core.data_objects import ObjectRegistry
 from ..core.mover import ChannelSimBackend, SimTierBackend
+from ..core.partition import bin_mass, chunk_spans
 from ..core.runtime import UnimemRuntime
 from ..core.tiers import MachineProfile
 
@@ -38,6 +39,12 @@ class SimObjectAccess:
 
     accesses: float              # main-memory accesses (cachelines)
     stream_fraction: float = 1.0  # 1.0 = pure streaming, 0.0 = pure chasing
+    # Optional access distribution over the object's byte range: relative
+    # weights over equal-width bins (skewed workloads — power-law adjacency,
+    # sliding KV hot windows).  None = uniform.  Drives both the simulated
+    # physics (per-chunk service times) and, via ``PhaseTraceEvent.
+    # access_bins``, the runtime's per-chunk attribution.
+    density: Optional[Sequence[float]] = None
 
 
 @dataclasses.dataclass
@@ -159,11 +166,20 @@ class SimulationEngine:
             if name in self.registry:
                 parts.append((self.registry[name], acc.accesses))
             else:
-                # partitioned: distribute accesses over chunks by size
-                chunks = [o for o in self.registry if o.parent == name]
-                total = sum(c.size_bytes for c in chunks) or 1
-                for c in chunks:
-                    parts.append((c, acc.accesses * c.size_bytes / total))
+                # partitioned: distribute accesses over chunks by the true
+                # access density (uniform = by size) — the simulated ground
+                # truth the profiler's sampled attribution approximates
+                spans = chunk_spans(self.registry, name)
+                total = sum(c.size_bytes for c, _, _ in spans) or 1
+                if acc.density is None:
+                    for c, _, _ in spans:
+                        parts.append((c, acc.accesses * c.size_bytes / total))
+                else:
+                    masses = [bin_mass(acc.density, lo / total, hi / total)
+                              for _, lo, hi in spans]
+                    norm = sum(masses) or 1.0
+                    for (c, _, _), m in zip(spans, masses):
+                        parts.append((c, acc.accesses * m / norm))
             for obj, n_acc in parts:
                 tier = (self.machine.fast if obj.tier == "fast"
                         else self.machine.slow)
@@ -194,15 +210,21 @@ class SimulationEngine:
                 self.clock += stall + t_phase
                 t_iter += stall + t_phase
                 if self.runtime is not None:
-                    # PEBS-like attribution: per-object share of phase time.
+                    # PEBS-like attribution: per-object share of phase time,
+                    # plus each skewed object's true address histogram (the
+                    # profiler resamples it with multinomial noise).
                     shares = {}
                     for name in ph.touches:
                         tt = sum(v for k, v in obj_times.items()
                                  if k == name or k.startswith(name + "#"))
                         shares[name] = tt / t_phase if t_phase > 0 else 0.0
+                    bins = {name: acc.density
+                            for name, acc in ph.touches.items()
+                            if acc.density is not None}
                     self.runtime.phase_end(i, elapsed=t_phase,
                                            accesses=ph.true_accesses(),
-                                           time_shares=shares)
+                                           time_shares=shares,
+                                           access_bins=bins or None)
             if self.runtime is not None:
                 self.runtime.end_iteration()
             iter_times.append(t_iter)

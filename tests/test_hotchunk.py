@@ -1,0 +1,342 @@
+"""Hot-chunk placement pipeline: per-chunk attribution conservation,
+skew-aware partitioning, vectorized-planner equivalence, and the
+incremental-replan regression (plan never dropped once built)."""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # no hypothesis: seeded shim
+    from _propcheck import st, given, settings
+
+from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, PhaseProfiler,
+                        Planner, RuntimeConfig, UnimemRuntime,
+                        build_phase_graph, calibrate)
+from repro.core.data_objects import DataObject, ObjectRegistry
+from repro.core.partition import (auto_partition, bin_mass, chunk_spans,
+                                  partition_object_spans, resplit_refs,
+                                  skew_boundaries)
+from repro.core.phase import PhaseTraceEvent
+from repro.core.profiler import ObjectPhaseProfile
+from repro.sim import (SKEWED_SCENARIO_WORKLOADS, SimulationEngine,
+                       power_law_density)
+
+MB = 1024 ** 2
+M = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+
+
+# ---------------------------------------------------------------------------
+# profiler: running mean, accessed_bytes, bin sampling
+# ---------------------------------------------------------------------------
+def test_observe_running_mean_not_clobber():
+    """profile_iterations > 1 must average observations, not last-write-win."""
+    prof = PhaseProfiler(M, seed=0, noise=0.0)
+    for t in (0.1, 0.3):
+        prof.observe(PhaseTraceEvent(0, t, {"a": 1e6}))
+    p = prof.profile(0, "a")
+    assert p.weight == pytest.approx(2.0)
+    assert p.phase_time == pytest.approx(0.2)           # mean of 0.1, 0.3
+    assert p.data_access == pytest.approx(1e6)          # no noise -> exact
+    assert prof.phase_time(0) == pytest.approx(0.2)
+
+
+def test_observe_noise_shrinks_with_iterations():
+    """Averaging N noisy observations lands closer to the true count than a
+    single observation does (the point of multi-iteration profiling)."""
+    errs = []
+    for n_obs in (1, 16):
+        prof = PhaseProfiler(M, seed=3, noise=0.05)
+        for _ in range(n_obs):
+            prof.observe(PhaseTraceEvent(0, 0.1, {"a": 1e6}))
+        errs.append(abs(prof.profile(0, "a").data_access - 1e6))
+    assert errs[1] < errs[0]
+
+
+def test_accessed_bytes_implemented():
+    p = ObjectPhaseProfile(0, "o", data_access=1e6, n_samples=1e5,
+                           samples_with_access=1e4, phase_time=0.1)
+    assert p.accessed_bytes == pytest.approx(1e6 * 64.0)
+    prof = PhaseProfiler(M, seed=0)
+    prof.observe(PhaseTraceEvent(0, 0.1, {"a": 1e6}))
+    q = prof.profile(0, "a")
+    assert q.accessed_bytes == pytest.approx(
+        q.data_access * M.cacheline_bytes)
+
+
+def test_bin_sampling_tracks_true_density():
+    truth = np.array(power_law_density(16, 1.5))
+    truth /= truth.sum()
+    prof = PhaseProfiler(M, seed=1)
+    for _ in range(8):
+        prof.observe(PhaseTraceEvent(0, 0.5, {"a": 1e6},
+                                     access_bins={"a": list(truth)}))
+    w = prof.profile(0, "a").bin_weights
+    assert w is not None and len(w) == 16
+    assert np.abs(w - truth).max() < 0.03    # sampled, but close
+
+    # decay keeps the estimate but lets fresh observations dominate
+    prof.decay(0.1)
+    flat = [1.0] * 16
+    for _ in range(8):
+        prof.observe(PhaseTraceEvent(0, 0.5, {"a": 1e6},
+                                     access_bins={"a": flat}))
+    w2 = prof.profile(0, "a").bin_weights
+    assert np.abs(w2 - 1.0 / 16).max() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# conservation: per-chunk attribution sums to the parent's true count
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 200))
+@settings(max_examples=25, deadline=None)
+def test_chunk_attribution_conserves_parent_refs(seed):
+    rng = random.Random(seed)
+    reg = ObjectRegistry()
+    size = rng.randint(100, 400) * MB
+    reg.alloc("big", size, chunkable=True)
+    n_bins = rng.choice([8, 16, 64])
+    weights = [rng.random() ** 2 for _ in range(n_bins)]
+    total_refs = rng.uniform(1e5, 1e7)
+    graph = build_phase_graph([("p0", {"big": total_refs})], times=[0.1])
+    prof = PhaseProfiler(M, seed=seed)
+    prof.observe(PhaseTraceEvent(0, 0.1, {"big": total_refs},
+                                 access_bins={"big": weights}))
+    prof.annotate_graph(graph)
+    observed_total = graph[0].refs["big"]
+    cap = rng.randint(30, 90) * MB
+    auto_partition(reg, graph, cap, profiler=prof)
+    chunks = [o for o in reg if o.parent == "big"]
+    assert len(chunks) >= 2
+    assert sum(c.size_bytes for c in chunks) == size
+    # per-chunk attributed accesses sum to the parent's (observed) count
+    attributed = sum(graph[0].refs.get(c.name, 0.0) for c in chunks)
+    assert attributed == pytest.approx(observed_total, rel=1e-9)
+
+
+def test_bin_mass_is_a_measure():
+    w = power_law_density(64, 1.3)
+    assert bin_mass(w, 0.0, 1.0) == pytest.approx(1.0)
+    cuts = [0.0, 0.13, 0.5, 0.77, 1.0]
+    parts = [bin_mass(w, a, b) for a, b in zip(cuts, cuts[1:])]
+    assert sum(parts) == pytest.approx(1.0)
+    assert all(p >= 0 for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# skew-aware partitioning picks the hot head
+# ---------------------------------------------------------------------------
+def test_skew_boundaries_refine_hot_region():
+    """Under a power-law histogram the hot head is cut into finer chunks
+    than the cold tail, and the head chunks capture most of the mass."""
+    size = 512 * MB
+    w = power_law_density(64, 1.5)        # head-heavy, unpermuted
+    bounds = skew_boundaries(size, [w], coarse_bytes=64 * MB,
+                             min_chunk_bytes=4 * MB)
+    sizes = [b - a for a, b in zip([0] + bounds, bounds)]
+    assert bounds[-1] == size
+    assert min(sizes) < 16 * MB           # fine chunks somewhere
+    assert sizes[0] <= sizes[-1]          # head at least as fine as tail
+    # the first quarter of the byte range carries most of the mass and got
+    # more cuts than the last quarter
+    head_cuts = sum(1 for b in bounds if b <= size // 4)
+    tail_cuts = sum(1 for b in bounds if b > 3 * size // 4)
+    assert head_cuts > tail_cuts
+
+
+def test_uniform_histogram_recovers_equal_chunking():
+    """A measured histogram with no skew degenerates to an equal split:
+    every chunk the same size and none above the conservative
+    capacity/chunk_divisor ceiling (the paper's policy as the uniform
+    limit; bisection lands on 40 MB instead of 64 MB chunks)."""
+    size = 320 * MB
+    bounds = skew_boundaries(size, [[1.0] * 64], coarse_bytes=64 * MB,
+                             min_chunk_bytes=4 * MB)
+    sizes = {b - a for a, b in zip([0] + bounds, bounds)}
+    assert len(sizes) == 1                  # equal chunks
+    assert max(sizes) <= 64 * MB            # conservative ceiling holds
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_skew_partition_places_hot_head(seed):
+    """Property: after skew-aware partitioning of a power-law object, the
+    chunks covering the hottest measured bins end up with higher per-byte
+    reference density than the coldest ones."""
+    rng = random.Random(seed)
+    alpha = rng.uniform(1.1, 1.8)
+    size = rng.randint(300, 600) * MB
+    reg = ObjectRegistry()
+    reg.alloc("adj", size, chunkable=True)
+    w = power_law_density(64, alpha)       # hot head at byte 0
+    graph = build_phase_graph([("gather", {"adj": 1e7})], times=[0.1])
+    prof = PhaseProfiler(M, seed=seed)
+    for _ in range(4):
+        prof.observe(PhaseTraceEvent(0, 0.1, {"adj": 1e7},
+                                     access_bins={"adj": w}))
+    prof.annotate_graph(graph)
+    auto_partition(reg, graph, 256 * MB, profiler=prof)
+    spans = chunk_spans(reg, "adj")
+    assert len(spans) >= 2
+    dens = [(graph[0].refs.get(c.name, 0.0) / c.size_bytes, lo)
+            for c, lo, hi in spans]
+    head_density = dens[0][0]
+    tail_density = dens[-1][0]
+    assert head_density > 2 * tail_density
+
+
+# ---------------------------------------------------------------------------
+# planner: vectorized path is plan-identical to the scalar path
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 300))
+@settings(max_examples=30, deadline=None)
+def test_vectorized_planner_matches_legacy(seed):
+    rng = random.Random(seed)
+    reg = ObjectRegistry()
+    n_obj = rng.randint(1, 10)
+    for i in range(n_obj):
+        reg.alloc(f"o{i}", rng.randint(1, 120) * MB,
+                  tier="fast" if rng.random() < 0.3 else "slow")
+    if rng.random() < 0.6:               # a partitioned parent
+        for k in range(rng.randint(2, 6)):
+            reg.register(DataObject(
+                name=f"big#{k}", size_bytes=rng.randint(10, 40) * MB,
+                parent="big", chunk_index=k))
+    n_ph = rng.randint(1, 6)
+    refs, times = [], []
+    has_chunks = any(o.parent == "big" for o in reg)
+    for _ in range(n_ph):
+        r = {o: rng.uniform(1e4, 1e6) for o in reg.names()
+             if rng.random() < 0.5}
+        if has_chunks and rng.random() < 0.5:
+            r["big"] = rng.uniform(1e5, 1e6)    # parent-level profile
+        refs.append(r)
+        times.append(rng.uniform(0.01, 0.2))
+    graph = build_phase_graph([(f"p{i}", rr) for i, rr in enumerate(refs)],
+                              times=times)
+    prof = PhaseProfiler(M, seed=seed)
+    for i, rr in enumerate(refs):
+        bins = ({"big": power_law_density(16, 1.4)}
+                if "big" in rr and rng.random() < 0.5 else None)
+        prof.observe(PhaseTraceEvent(i, times[i], dict(rr),
+                                     access_bins=bins))
+    prof.annotate_graph(graph)
+    cap = rng.randint(50, 250) * MB
+    vec = Planner(M, reg, CalibrationConstants(), cap, vectorized=True)
+    leg = Planner(M, reg, CalibrationConstants(), cap, vectorized=False)
+    for fn in ("plan_local", "plan_global"):
+        a, b = getattr(vec, fn)(graph, prof), getattr(leg, fn)(graph, prof)
+        assert a.moves == b.moves
+        assert a.residents == b.residents
+        assert a.predicted_iteration_time == b.predicted_iteration_time
+
+
+# ---------------------------------------------------------------------------
+# incremental replanning: the plan is never dropped once built
+# ---------------------------------------------------------------------------
+def _drive_replan(incremental: bool):
+    rt = UnimemRuntime(
+        M, RuntimeConfig(fast_capacity_bytes=20 * MB, mover="fifo",
+                         incremental_replan=incremental,
+                         enable_initial_placement=False),
+        cf=calibrate(M))
+    rt.alloc("a", size_bytes=10 * MB)
+    rt.alloc("b", size_bytes=10 * MB)
+    rt.alloc("c", size_bytes=15 * MB)
+    rt.start_loop(["p0", "p1"])
+    served_unplanned = 0
+    ever_planned = False
+
+    def run_iter(times, accs):
+        nonlocal served_unplanned, ever_planned
+        rt.begin_iteration()
+        for i, t in enumerate(times):
+            rt.phase_begin(i)
+            if ever_planned and rt.plan is None:
+                served_unplanned += 1
+            rt.phase_end(i, elapsed=t, accesses=accs[i])
+        rt.end_iteration()
+        if rt.plan is not None:
+            ever_planned = True
+
+    hot_then = [{"a": 1e6, "b": 5e5}, {"a": 8e5}]   # a hot everywhere
+    hot_now = [{"c": 1e6, "b": 2e5}, {"c": 9e5}]    # c takes over, a cold
+    for _ in range(4):
+        run_iter([0.1, 0.08], hot_then)
+    for _ in range(8):
+        run_iter([0.25, 0.08], hot_now)     # >10% drift on phase 0
+    return rt, served_unplanned
+
+
+def test_monitor_drifted_phases_diagnostic():
+    from repro.core import VariationMonitor
+    mon = VariationMonitor(threshold=0.1, patience=1)
+    mon.set_baseline(0, 1.0)
+    mon.set_baseline(1, 1.0)
+    assert mon.observe(0, 1.5) is not None
+    assert mon.drifted_phases() == [0]
+    assert [e.phase_index for e in mon.consume_events()] == [0]
+    assert mon.drifted_phases() == []       # consumed -> no stale re-trigger
+
+
+def test_incremental_replan_never_serves_unplanned():
+    """Acceptance: once a first plan exists, a drift-triggered replan must
+    never serve an iteration with plan=None (regression on the
+    variation-monitor path)."""
+    rt, served_unplanned = _drive_replan(incremental=True)
+    assert rt.n_replans >= 1
+    assert rt.n_incremental_replans >= 1
+    assert served_unplanned == 0
+    assert rt.plan is not None
+    stats = rt.stats()
+    assert stats["n_replans"] == rt.n_replans
+
+
+def test_legacy_full_reset_serves_unplanned():
+    """The paper's full reset (the behaviour the incremental path replaces)
+    drops the plan and serves unplaced iterations while re-profiling."""
+    rt, served_unplanned = _drive_replan(incremental=False)
+    assert rt.n_replans >= 1
+    assert rt.n_incremental_replans == 0
+    assert served_unplanned > 0
+
+
+def test_incremental_replan_adapts_placement():
+    """After drift shifts the hot object, the replanned placement follows:
+    the newly-hot object ends up fast-resident."""
+    rt, _ = _drive_replan(incremental=True)
+    assert rt.plan is not None
+    final_residents = rt.plan.residents[-1]
+    assert "c" in final_residents or rt.registry["c"].tier == "fast"
+
+
+# ---------------------------------------------------------------------------
+# end to end: the hot-chunk pipeline beats uniform attribution on skew
+# ---------------------------------------------------------------------------
+def _run_pipeline(wl, chunk_aware: bool, iters: int = 8):
+    rt = UnimemRuntime(
+        M, RuntimeConfig(fast_capacity_bytes=256 * MB, mover="slack",
+                         drift_threshold=10.0, chunk_aware=chunk_aware),
+        cf=calibrate(M))
+    for n, s in wl.objects.items():
+        rt.alloc(n, size_bytes=s, chunkable=wl.chunkable.get(n, False))
+    rt.start_loop([p.name for p in wl.phases],
+                  static_refs=wl.static_ref_counts())
+    return SimulationEngine(M, wl, runtime=rt).run(iters), rt
+
+
+@pytest.mark.parametrize("wl_name", sorted(SKEWED_SCENARIO_WORKLOADS))
+def test_hotchunk_beats_uniform_on_skew(wl_name):
+    """Acceptance: per-chunk attribution + skew-aware partitioning strictly
+    improves steady-state iteration time over PR 1's uniform-attribution
+    slack engine on the skewed scenario variants."""
+    wl = SKEWED_SCENARIO_WORKLOADS[wl_name]()
+    uni, _ = _run_pipeline(wl, chunk_aware=False)
+    hot, hrt = _run_pipeline(wl, chunk_aware=True)
+    assert hot.steady_iteration_time < uni.steady_iteration_time
+    # and it did so by actually discovering chunks
+    assert any(o.parent is not None for o in hrt.registry)

@@ -6,7 +6,8 @@ try:
 except ImportError:                      # no hypothesis: seeded shim
     from _propcheck import st, given, settings
 
-from repro.core.knapsack import Item, solve, total_size, total_value
+from repro.core.knapsack import (Item, solve, solve_reference, total_size,
+                                 total_value)
 
 items_strategy = st.lists(
     st.tuples(st.floats(-5.0, 50.0), st.integers(1, 200 * 1024 * 1024)),
@@ -49,3 +50,26 @@ def test_exact_small_instance():
 def test_negative_never_chosen():
     its = [Item("a", -1.0, 1), Item("b", 2.0, 1)]
     assert solve(its, 10) == ["b"]
+
+
+@given(items=items_strategy, cap=st.integers(0, 1024 * 1024 * 1024))
+@settings(max_examples=200, deadline=None)
+def test_packed_bitset_solver_matches_reference(items, cap):
+    """The packed-bitset DP must return selections value-equal (in fact
+    identical) to the pre-optimization bool-matrix DP on randomized
+    instances."""
+    its = [Item(f"o{i}", v, s) for i, (v, s) in enumerate(items)]
+    fast = solve(its, cap)
+    ref = solve_reference(its, cap)
+    assert fast == ref
+    assert total_value(its, fast) == total_value(its, ref)
+
+
+def test_packed_bitset_matches_reference_dense():
+    """Many similar items exercising deep backtracks across byte borders."""
+    import random
+    rng = random.Random(0)
+    its = [Item(f"o{i}", rng.uniform(0.1, 1.0), rng.randint(1, 1 << 16))
+           for i in range(300)]
+    cap = 1 << 20
+    assert solve(its, cap) == solve_reference(its, cap)
