@@ -38,10 +38,12 @@ def run_unimem(machine: MachineProfile, wl: SimWorkload,
         machine,
         config or RuntimeConfig(fast_capacity_bytes=dram_bytes, mover=mover,
                                 **config_kw), cf=cf)
+    statics = wl.static_ref_counts()
     for n, s in wl.objects.items():
-        rt.alloc(n, size_bytes=s, chunkable=wl.chunkable.get(n, False))
-    rt.start_loop([p.name for p in wl.phases],
-                  static_refs=wl.static_ref_counts())
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    # v2 session API: no start_loop — the loop auto-starts on the first
+    # iteration and phases auto-register as the engine enters them
     eng = SimulationEngine(machine, wl, runtime=rt)
     res = eng.run(iters)
     return res, rt

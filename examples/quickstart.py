@@ -1,5 +1,9 @@
 """Quickstart: the Unimem runtime managing a CG-like workload on simulated
-DRAM+NVM, reproducing the paper's headline result in ~5 seconds.
+DRAM+NVM, reproducing the paper's headline result in ~5 seconds — written
+against the v2 session API: pytree-native ``register`` (here size-only
+objects), no upfront phase list (phases auto-register as the simulator's
+driver enters them), and the simulator supplying instrumentation through
+its ``SimSource``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -28,12 +32,15 @@ def main() -> None:
     dram = static("fast")
     nvm = static("slow")
 
+    # unimem_init + unimem_malloc: register each target object (size or
+    # pytree); static_refs feed the initial-placement compiler analysis
     rt = UnimemRuntime(machine, RuntimeConfig(fast_capacity_bytes=256 * MB),
                        cf=calibrate(machine))
+    statics = wl.static_ref_counts()
     for n, s in wl.objects.items():
-        rt.alloc(n, size_bytes=s)
-    rt.start_loop([p.name for p in wl.phases],
-                  static_refs=wl.static_ref_counts())
+        rt.register(n, s, static_refs=statics.get(n))
+    # the engine drives `with rt.iteration(): with rt.phase(name): ...`
+    # itself; its SimSource supplies accesses/time_shares/access_bins
     uni = SimulationEngine(machine, wl, runtime=rt).run(12)
 
     d = dram.steady_iteration_time

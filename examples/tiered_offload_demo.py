@@ -3,6 +3,13 @@ memory kinds (``device`` <-> ``pinned_host``) with async device_put — the
 production HBM/host path, exercised on the CPU backend (which exposes the
 same memory-kind API).
 
+v2 session API: arrays are registered pytree-natively (leaf byte spans
+recorded), the loop is the ``iteration()``/``phase()`` context managers,
+and the copy engine comes from the string-keyed backend registry —
+``backend="jax_async"`` selects asynchronous device_put with per-leaf
+fencing (tier flips when a copy *lands*, settled without blocking at phase
+boundaries).
+
   PYTHONPATH=src python examples/tiered_offload_demo.py
 """
 
@@ -13,44 +20,44 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.core import (JaxTierBackend, PAPER_DRAM_NVM, RuntimeConfig,
-                        UnimemRuntime)
+from repro.core import PAPER_DRAM_NVM, RuntimeConfig, UnimemRuntime
 
 MB = 1024 ** 2
 
 
 def main() -> None:
     dev = jax.devices()[0]
-    print("device:", dev, "memories:",
-          [m.kind for m in dev.addressable_memories()])
+    kinds = [m.kind for m in dev.addressable_memories()]
+    print("device:", dev, "memories:", kinds)
+    # host tier = pinned_host where the backend offers it (TPU/GPU); on a
+    # backend without it the moves are logical (tier bookkeeping only)
+    host_kind = "pinned_host" if "pinned_host" in kinds else kinds[0]
 
     machine = PAPER_DRAM_NVM
     rt = UnimemRuntime(machine,
                        RuntimeConfig(fast_capacity_bytes=64 * MB,
-                                     enable_partitioning=False),
-                       backend=JaxTierBackend(machine))
+                                     enable_partitioning=False,
+                                     backend="jax_async"))
 
     # register real arrays as target data objects (all start on host tier)
     sharding = jax.sharding.SingleDeviceSharding(
-        dev, memory_kind="pinned_host")
+        dev, memory_kind=host_kind)
     objs = {}
     for name, mbs in (("weights_hot", 24), ("kv_block", 24),
                       ("opt_state_cold", 48)):
         arr = jax.device_put(
             jnp.ones((mbs * MB // 4,), jnp.float32), sharding)
-        objs[name] = rt.alloc(name, payload=arr)
-    rt.start_loop(["compute", "update"])
+        objs[name] = rt.register(name, arr)
 
     # iteration 1 profiles; accesses favor the hot objects
     for it in range(4):
-        rt.begin_iteration()
-        rt.phase_begin(0)
-        time.sleep(0.01)
-        rt.phase_end(0, elapsed=0.05,
-                     accesses={"weights_hot": 4e5, "kv_block": 3e5})
-        rt.phase_begin(1)
-        rt.phase_end(1, elapsed=0.02, accesses={"opt_state_cold": 5e4})
-        rt.end_iteration()
+        with rt.iteration():
+            with rt.phase("compute", elapsed=0.05,
+                          accesses={"weights_hot": 4e5, "kv_block": 3e5}):
+                time.sleep(0.01)
+            with rt.phase("update", elapsed=0.02,
+                          accesses={"opt_state_cold": 5e4}):
+                pass
         for name, obj in objs.items():
             kind = (jax.tree_util.tree_leaves(obj.payload)[0]
                     .sharding.memory_kind)

@@ -1,11 +1,15 @@
 """Unimem core: runtime data management on heterogeneous memory (the paper's
 contribution, adapted to TPU memory tiers)."""
 
+from .backends import available_backends, make_backend, register_backend
 from .data_objects import DataObject, ObjectRegistry
+from .instrumentation import (InstrumentationSource, ManualSource,
+                              PhaseSample, XlaCostAnalysisSource)
 from .knapsack import Item, solve as knapsack_solve
 from .monitor import VariationMonitor
-from .mover import (ChannelSimBackend, JaxTierBackend, MoveRecord,
-                    ProactiveMover, SimTierBackend, SlackAwareMover)
+from .mover import (AsyncJaxTierBackend, ChannelSimBackend, JaxTierBackend,
+                    MoveRecord, ProactiveMover, SimTierBackend,
+                    SlackAwareMover)
 from .perfmodel import (CalibrationConstants, Sensitivity, benefit, calibrate,
                         classify, consumed_bandwidth, movement_cost, weight)
 from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
@@ -14,14 +18,19 @@ from .planner import (MoveOp, PlacementPlan, Planner, ScheduledMove,
                       emit_schedule)
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
+from .session import PhaseContext, Session
 from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
                     STT_RAM, PCRAM, RERAM, TPU_V5E, TPU_V5E_VMEM,
                     V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
 
 __all__ = [
     "DataObject", "ObjectRegistry", "Item", "knapsack_solve",
-    "VariationMonitor", "JaxTierBackend", "ProactiveMover", "SimTierBackend",
+    "VariationMonitor", "JaxTierBackend", "AsyncJaxTierBackend",
+    "ProactiveMover", "SimTierBackend",
     "ChannelSimBackend", "SlackAwareMover", "MoveRecord",
+    "available_backends", "make_backend", "register_backend",
+    "InstrumentationSource", "ManualSource", "PhaseSample",
+    "XlaCostAnalysisSource", "Session", "PhaseContext",
     "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
     "consumed_bandwidth", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",

@@ -1,0 +1,70 @@
+"""String-keyed copy-backend registry (runtime API v2).
+
+Backends used to be wired ad hoc: ``UnimemRuntime`` defaulted to
+``JaxTierBackend``, the simulator reached into the runtime to swap in
+``SimTierBackend``/``ChannelSimBackend``, and adding a new copy engine
+meant touching every constructor.  The registry makes the backend a config
+string (``RuntimeConfig.backend = "sim" | "jax" | "jax_async"``) resolved
+through one factory table, so new engines (the ROADMAP's CUDA-stream-style
+channels, a CPU memcpy pool, ...) register themselves without changing any
+driver.
+
+Factory signature: ``factory(machine, **options) -> TierBackend``.  All
+factories must tolerate unknown keyword options (each driver passes its
+full option set — ``now_fn``, ``mover``, ``channels`` — and every factory
+picks what it understands).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+from .mover import (AsyncJaxTierBackend, ChannelSimBackend, JaxTierBackend,
+                    SimTierBackend)
+from .tiers import MachineProfile
+
+BackendFactory = Callable[..., Any]
+
+_REGISTRY: Dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str, factory: BackendFactory,
+                     *, overwrite: bool = False) -> None:
+    """Register a copy-backend factory under ``name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make_backend(name: str, machine: MachineProfile, **options: Any):
+    """Instantiate the backend registered under ``name``."""
+    factory = _REGISTRY.get(name)
+    if factory is None:
+        raise ValueError(f"unknown copy backend {name!r}; registered: "
+                         f"{available_backends()}")
+    return factory(machine, **options)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+def _sim_factory(machine: MachineProfile, *, now_fn=None, mover: str = "slack",
+                 channels: int = 2, **_: Any):
+    """Simulated copy engine matched to the configured migration engine:
+    the slack mover gets the multi-channel engine (tier flips on landing),
+    the FIFO baseline the single serial queue."""
+    if now_fn is None:
+        now_fn = lambda: 0.0            # noqa: E731 — static virtual clock
+    if mover == "slack":
+        return ChannelSimBackend(machine, now_fn, channels=channels)
+    return SimTierBackend(machine, now_fn)
+
+
+register_backend("sim", _sim_factory)
+register_backend("jax", lambda machine, **_: JaxTierBackend(machine))
+register_backend("jax_async", lambda machine, **_: AsyncJaxTierBackend(machine))

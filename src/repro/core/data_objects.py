@@ -12,7 +12,7 @@ regular arrays can be split into chunks that are placed independently.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -20,13 +20,18 @@ class DataObject:
     """A managed data object.
 
     ``payload`` optionally binds a real JAX array (or pytree of arrays);
-    simulation-only objects carry just ``size_bytes``.
+    simulation-only objects carry just ``size_bytes``.  ``leaf_spans``
+    records the byte span of each pytree leaf inside the object
+    (``(path, offset, nbytes)`` in flatten order) when the object was
+    registered from a pytree — chunk attribution and partition boundaries
+    can then align to leaf boundaries.
     """
 
     name: str
     size_bytes: int
     chunkable: bool = False
     payload: Any = None
+    leaf_spans: Optional[List[Tuple[str, int, int]]] = None
     # Filled by partition.partition_object for chunks of a parent object.
     parent: Optional[str] = None
     chunk_index: Optional[int] = None
@@ -48,11 +53,28 @@ class ObjectRegistry:
 
     def __init__(self) -> None:
         self._objs: Dict[str, DataObject] = {}
+        # live chunk count per parent name: O(1) collision checks even at
+        # thousands of registered chunks (the planner-scale regime)
+        self._chunks_of: Dict[str, int] = {}
 
     def register(self, obj: DataObject) -> DataObject:
         if obj.name in self._objs:
-            raise KeyError(f"duplicate data object {obj.name!r}")
+            raise ValueError(
+                f"duplicate data object {obj.name!r}: a registered object "
+                "already holds this name (re-registering would orphan its "
+                "tier and chunk state)")
+        if self._chunks_of.get(obj.name, 0) > 0:
+            example = next(o.name for o in self._objs.values()
+                           if o.parent == obj.name)
+            raise ValueError(
+                f"duplicate data object {obj.name!r}: it was partitioned "
+                f"and its chunks (e.g. {example!r}) are live; registering "
+                "a new object under the parent name would orphan their "
+                "chunk state")
         self._objs[obj.name] = obj
+        if obj.parent is not None:
+            self._chunks_of[obj.parent] = \
+                self._chunks_of.get(obj.parent, 0) + 1
         return obj
 
     def alloc(self, name: str, size_bytes: int, *, chunkable: bool = False,
@@ -87,4 +109,10 @@ class ObjectRegistry:
         return sum(o.size_bytes for o in self._objs.values() if o.tier == tier)
 
     def remove(self, name: str) -> None:
-        del self._objs[name]
+        obj = self._objs.pop(name)
+        if obj.parent is not None:
+            left = self._chunks_of.get(obj.parent, 0) - 1
+            if left > 0:
+                self._chunks_of[obj.parent] = left
+            else:
+                self._chunks_of.pop(obj.parent, None)

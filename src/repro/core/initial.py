@@ -29,9 +29,13 @@ def initial_placement(registry: ObjectRegistry,
     Unknown objects (no static estimate) are left in the slow tier.
     """
     budget = fast_capacity_bytes - reserve_bytes
+    # tie-break by name so the placement is a pure function of the counts —
+    # not of the dict insertion order the driver happened to use (old-API
+    # start_loop(static_refs=...) vs v2 per-register static_refs must be
+    # bit-identical)
     order = sorted(
         (name for name in static_ref_counts if name in registry),
-        key=lambda n: static_ref_counts[n], reverse=True)
+        key=lambda n: (-static_ref_counts[n], n))
     placed: List[str] = []
     for name in order:
         obj = registry[name]

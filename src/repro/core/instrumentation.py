@@ -1,0 +1,249 @@
+"""Pluggable instrumentation sources (runtime API v2).
+
+The paper gets per-phase access counts from PEBS sampling; this repo has
+grown three other ways to learn how a phase touches the registered objects
+(explicit driver dicts, the simulator's density physics, XLA cost analysis
+on hardware dry-runs).  Each used to hand-roll its own
+``phase_end(accesses=..., access_bins=...)`` plumbing; the
+:class:`InstrumentationSource` protocol makes them interchangeable
+providers that a :class:`~.session.Session` consults at every phase exit:
+
+* :class:`ManualSource` — the Table-2 style: the driver states each phase's
+  per-object access counts explicitly (what the old imperative API passed
+  to ``phase_end``).
+* ``repro.sim.SimSource`` — the discrete-event simulator's density-driven
+  physics (stream/chase service times, per-chunk densities), migrated out
+  of ``sim/engine.py`` so the engine is just a clock around it.
+* :class:`XlaCostAnalysisSource` — the TPU attribution analogue: there is
+  no PEBS on TPU, but a compiled XLA program's per-op operand footprints
+  can be mapped onto the registered objects' recorded leaf spans, giving
+  the same ``accesses``/``access_bins`` stream the simulator produces —
+  hardware dry-runs feed the exact profiler pipeline the paper's sampler
+  does.
+
+A source returns a :class:`PhaseSample`; fields left ``None`` fall back to
+the session's own measurement (wall-clock timing, access-count shares).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PhaseSample:
+    """One phase execution's instrumentation (profiler input, pre-sampling).
+
+    ``elapsed`` is the phase's execution time in seconds when the source
+    defines virtual time (the simulator) or an analytic estimate; ``None``
+    means the session should use the wall-clock time its phase context
+    measured."""
+
+    accesses: Dict[str, float] = dataclasses.field(default_factory=dict)
+    time_shares: Optional[Dict[str, float]] = None
+    access_bins: Optional[Dict[str, Sequence[float]]] = None
+    elapsed: Optional[float] = None
+
+
+class InstrumentationSource(Protocol):
+    """Provider of per-phase instrumentation, consulted at phase exit."""
+
+    def collect(self, phase_name: str) -> PhaseSample: ...
+
+
+# ---------------------------------------------------------------------------
+class ManualSource:
+    """Explicit per-phase instrumentation dicts.
+
+    The driver states (once, or per iteration via :meth:`set`) what each
+    phase touches — the information the old imperative API passed to every
+    ``phase_end`` call."""
+
+    def __init__(self, phases: Optional[Dict[str, PhaseSample]] = None):
+        self._phases: Dict[str, PhaseSample] = dict(phases or {})
+
+    def set(self, phase_name: str, *,
+            accesses: Optional[Dict[str, float]] = None,
+            time_shares: Optional[Dict[str, float]] = None,
+            access_bins: Optional[Dict[str, Sequence[float]]] = None,
+            elapsed: Optional[float] = None) -> None:
+        self._phases[phase_name] = PhaseSample(
+            accesses=dict(accesses or {}), time_shares=time_shares,
+            access_bins=access_bins, elapsed=elapsed)
+
+    def collect(self, phase_name: str) -> PhaseSample:
+        return self._phases.get(phase_name, PhaseSample())
+
+
+# ---------------------------------------------------------------------------
+# XLA cost-analysis attribution
+# ---------------------------------------------------------------------------
+#: tensor dtype -> bytes, covering both HLO (f32, s32, pred) and StableHLO
+#: MLIR (f32, i32, i1) spellings
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "i64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4, "i32": 4, "ui32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "i16": 2, "ui16": 2,
+    "s8": 1, "u8": 1, "i8": 1, "ui8": 1, "pred": 1, "i1": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8E4M3FN": 1, "f8E5M2": 1,
+}
+
+
+def _program_text(program: Any) -> str:
+    if isinstance(program, str):
+        return program
+    as_text = getattr(program, "as_text", None)
+    if as_text is None:
+        raise TypeError(f"cannot extract program text from {type(program)!r}")
+    return as_text()
+
+
+def _mlir_param_uses(text: str) -> Optional[Dict[int, int]]:
+    """Use counts per ``%argN`` of a StableHLO module (``Lowered.as_text``).
+
+    Only the entry function's region is counted: private helper functions
+    (``lax.scan`` bodies lower to ``func.func private @...``) re-declare
+    and use their own ``%argN`` names, which must not be charged to the
+    entry parameters.  Regions nested inside @main are safe — StableHLO
+    prints their block arguments as ``%iterArg...``, never ``%argN``.
+    Returns None when the text is not MLIR."""
+    if "func.func" not in text:
+        return None
+    m = re.search(r"func\.func\s+(?:\w+\s+)?@main\b", text)
+    if m is not None:
+        # @main's region runs until the next function declaration (jax
+        # prints one func.func per module-level function, entry first)
+        nxt = text.find("func.func", m.end())
+        region = text[m.start():nxt if nxt != -1 else len(text)]
+    else:
+        region = text                   # no @main: single-function module
+    uses: Dict[int, int] = {}
+    for mm in re.finditer(r"%arg(\d+)\b", region):
+        idx = int(mm.group(1))
+        uses[idx] = uses.get(idx, 0) + 1
+    # one occurrence per parameter is its declaration in the signature
+    return {k: max(v - 1, 0) for k, v in uses.items()}
+
+
+def _hlo_param_uses(text: str) -> Dict[int, int]:
+    """Use counts per ``parameter(N)`` of the ENTRY computation of compiled
+    HLO text (``Compiled.as_text``)."""
+    entry = text
+    m = re.search(r"^ENTRY\b.*?\{(.*?)^\}", text, re.S | re.M)
+    if m is not None:
+        entry = m.group(1)
+    names: Dict[int, str] = {}
+    for m in re.finditer(
+            r"^\s*(%?[\w.\-]+)\s*=\s*[^=\n]*?\bparameter\((\d+)\)",
+            entry, re.M):
+        names[int(m.group(2))] = m.group(1)
+    uses: Dict[int, int] = {}
+    for idx, name in names.items():
+        # anchor on both sides (optionally %-sigiled) so `param_0` never
+        # matches inside `fused_param_0`
+        bare = name.lstrip("%")
+        pat = r"(?<![\w.\-])%?" + re.escape(bare) + r"(?![\w.\-])"
+        hits = len(re.findall(pat, entry))
+        uses[idx] = max(hits - 1, 0)        # minus the defining line
+    return uses
+
+
+class XlaCostAnalysisSource:
+    """Per-op operand footprints of compiled XLA programs, mapped onto the
+    registered objects' recorded leaf byte spans.
+
+    :meth:`bind` associates a phase name with a lowered/compiled program
+    and an *operand layout*: the program's flat parameter list described as
+    a sequence whose entries are registered object names (each consuming
+    that object's recorded leaves, in registration order — pytree-native
+    :meth:`Session.register` records them), plain ints (that many
+    unregistered parameters, e.g. the token batch), or example pytrees
+    (unregistered, leaf count taken from the tree).
+
+    Attribution: every instruction that reads parameter ``p`` contributes
+    ``p``'s tensor bytes to its footprint (the per-op operand footprint XLA
+    cost analysis charges); a leaf's footprint lands on the bins its byte
+    span covers inside the owning object, so objects whose leaves have
+    unequal fan-out produce *non-uniform* ``access_bins`` — exactly what
+    the skew-aware partitioner needs, with chunk boundaries free to align
+    to leaf boundaries.
+
+    Caveat: ``jax.jit`` prunes unused arguments by default; bind programs
+    whose listed operands are all used (or pass ``keep_unused=True``)."""
+
+    def __init__(self, session: Any, *, n_bins: int = 64):
+        self.registry = session.registry
+        self.machine = session.machine
+        self.n_bins = int(n_bins)
+        self._samples: Dict[str, PhaseSample] = {}
+
+    # -- binding -------------------------------------------------------------
+    def _leaf_count(self, entry: Any) -> int:
+        if isinstance(entry, int):
+            return entry
+        import jax
+        return len(jax.tree_util.tree_leaves(entry))
+
+    def bind(self, phase_name: str, program: Any,
+             operands: Sequence[Any], *,
+             elapsed: Optional[float] = None) -> PhaseSample:
+        """Attribute ``program``'s operand footprints to the registered
+        objects named in ``operands`` and store the resulting sample under
+        ``phase_name``."""
+        text = _program_text(program)
+        uses = _mlir_param_uses(text)
+        if uses is None:
+            uses = _hlo_param_uses(text)
+
+        # flat parameter index -> (object name, leaf byte span)
+        param_spans: Dict[int, Tuple[str, int, int]] = {}
+        next_param = 0
+        for entry in operands:
+            if isinstance(entry, str):
+                obj = self.registry[entry]
+                spans = obj.leaf_spans or [("", 0, obj.size_bytes)]
+                for _, off, nbytes in spans:
+                    param_spans[next_param] = (entry, off, nbytes)
+                    next_param += 1
+            else:
+                next_param += self._leaf_count(entry)
+
+        footprint: Dict[str, float] = {}
+        bins: Dict[str, np.ndarray] = {}
+        for pidx, (name, off, nbytes) in param_spans.items():
+            n_uses = uses.get(pidx, 0)
+            if n_uses <= 0 or nbytes <= 0:
+                continue
+            mass = float(nbytes) * n_uses
+            footprint[name] = footprint.get(name, 0.0) + mass
+            size = max(self.registry[name].size_bytes, 1)
+            hist = bins.setdefault(name, np.zeros(self.n_bins))
+            # spread the leaf's footprint over the bins its span covers
+            width = size / self.n_bins
+            lo_b = off / width
+            hi_b = (off + nbytes) / width
+            lo_i = int(np.floor(lo_b))
+            hi_i = min(int(np.ceil(hi_b)), self.n_bins)
+            for b in range(lo_i, max(hi_i, lo_i + 1)):
+                if b >= self.n_bins:
+                    break
+                overlap = min(hi_b, b + 1) - max(lo_b, b)
+                if overlap > 0:
+                    hist[b] += mass * overlap / max(hi_b - lo_b, 1e-12)
+
+        line = float(getattr(self.machine, "cacheline_bytes", 64))
+        sample = PhaseSample(
+            accesses={n: fp / line for n, fp in footprint.items()},
+            access_bins={n: h.tolist() for n, h in bins.items()
+                         if float(h.sum()) > 0.0} or None,
+            elapsed=elapsed)
+        self._samples[phase_name] = sample
+        return sample
+
+    # -- protocol ------------------------------------------------------------
+    def collect(self, phase_name: str) -> PhaseSample:
+        return self._samples.get(phase_name, PhaseSample())

@@ -87,6 +87,100 @@ class JaxTierBackend:
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
+class _AsyncJaxCopy:
+    """One in-flight async device_put (a whole object's leaves)."""
+
+    obj: DataObject
+    dst: str
+    leaves: List[Any]
+    landed: bool = False
+
+
+class AsyncJaxTierBackend(JaxTierBackend):
+    """Asynchronous ``jax.device_put`` with per-leaf fencing.
+
+    ``jax.device_put`` dispatches immediately and the TPU copy engine runs
+    in the background; unlike :class:`JaxTierBackend` (which flips the
+    object's tier at dispatch and fences all leaves at once), this backend
+    defers the tier flip until the copy *lands* — matching the simulator's
+    in-flight semantics — and exposes the scheduler surface the slack-aware
+    mover duck-types on:
+
+    * :meth:`settle` polls ``jax.Array.is_ready()`` per leaf and lands
+      every finished copy **without blocking**, so phase boundaries overlap
+      with copies still in flight instead of stalling on them;
+    * :meth:`wait` / :meth:`complete` fence one copy with per-leaf
+      ``block_until_ready`` (the consuming fence pays only for its own
+      object's leaves, not the whole in-flight set).
+    """
+
+    def __init__(self, machine: MachineProfile):
+        super().__init__(machine)
+        self._open: List[_AsyncJaxCopy] = []
+
+    def start_move(self, obj: DataObject, dst: str,
+                   after: Optional[_AsyncJaxCopy] = None) -> Any:
+        # ``after`` chains a fetch behind the eviction freeing its space:
+        # dispatching both immediately would transiently co-resident the
+        # incoming and outgoing bytes (an OOM risk when the fast tier is
+        # sized near capacity), so fence the predecessor's leaves first.
+        if after is not None and not getattr(after, "landed", True):
+            for leaf in after.leaves:
+                leaf.block_until_ready()
+            self._land(after)
+        tier = self.machine.fast if dst == "fast" else self.machine.slow
+        kind = tier.memory_kind
+        if obj.payload is None:
+            obj.tier = dst          # logical object: nothing to copy
+            return None
+        leaves, treedef = jax.tree_util.tree_flatten(obj.payload)
+        moved = [jax.device_put(l, self._sharding_for(l, kind))
+                 for l in leaves]
+        obj.payload = jax.tree_util.tree_unflatten(treedef, moved)
+        h = _AsyncJaxCopy(obj, dst, moved)
+        self._open.append(h)
+        return h
+
+    def _land(self, h: _AsyncJaxCopy) -> None:
+        if not h.landed:
+            h.obj.tier = h.dst
+            h.landed = True
+        # drop the handle (and its strong refs to the moved leaves) even
+        # when the caller fences via wait/complete and never settles —
+        # the FIFO mover does exactly that
+        try:
+            self._open.remove(h)
+        except ValueError:
+            pass
+
+    def wait(self, handle: Optional[_AsyncJaxCopy]) -> float:
+        if handle is not None:
+            for leaf in handle.leaves:
+                leaf.block_until_ready()
+            self._land(handle)
+        return 0.0              # real backend: the fence blocked, no stall
+
+    def complete(self, handle: Optional[_AsyncJaxCopy]) -> None:
+        self.wait(handle)
+
+    def is_done(self, handle: Optional[_AsyncJaxCopy]) -> bool:
+        """Non-blocking completion probe (the slack mover uses it to keep
+        in-flight evictions off the critical path)."""
+        if handle is None or handle.landed:
+            return True
+        return all(getattr(l, "is_ready", lambda: True)()
+                   for l in handle.leaves)
+
+    def settle(self, now: float = 0.0) -> None:
+        """Land every copy whose leaves are all ready — without blocking."""
+        for h in list(self._open):          # _land prunes as it lands
+            if all(getattr(l, "is_ready", lambda: True)()
+                   for l in h.leaves):
+                self._land(h)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
 class _SimCopy:
     obj: str
     dst: str
@@ -106,6 +200,11 @@ class SimTierBackend:
         self.now_fn = now_fn
         self._engine_free_at = 0.0
         self.copies: List[_SimCopy] = []
+
+    def place(self, obj: DataObject, dst: str) -> None:
+        """Allocation-time placement: no copy, the object starts in ``dst``
+        (paper §3.2 initial placement happens at ``unimem_malloc``)."""
+        obj.tier = dst
 
     def start_move(self, obj: DataObject, dst: str) -> _SimCopy:
         now = self.now_fn()
@@ -431,9 +530,18 @@ class SlackAwareMover:
                 continue
             if m.dst == "slow":
                 # eviction: never fenced (the phase does not read evicted
-                # data); once landed it counts as a fully-overlapped move
+                # data); once landed it counts as a fully-overlapped move.
+                # Timing-less backends are probed with their non-blocking
+                # is_done (blocking here — e.g. the async jax backend's
+                # complete() — would put the eviction back on the critical
+                # path while recording zero stall).
                 done = self._done_of(h)
-                if done is None or done <= now:
+                if done is not None:
+                    landed = done <= now
+                else:
+                    probe = getattr(self.backend, "is_done", None)
+                    landed = probe(h) if probe is not None else True
+                if landed:
                     self._inflight.pop(m.obj)
                     self.stats.overlapped_moves += 1
                     self._complete(h)

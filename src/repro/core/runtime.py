@@ -1,309 +1,92 @@
-"""UnimemRuntime — the facade tying profiling, modeling, planning and
-proactive movement together (paper Fig 8 workflow, Table 2 API).
+"""UnimemRuntime — compatibility facade over the v2 runtime session.
 
-Paper API mapping:
+Paper API mapping (Table 2), v2 session surface, and the deprecated
+imperative shims this facade keeps alive:
 
-=================  =========================================================
+=================  ==========================================================
 unimem_init        ``UnimemRuntime(machine, ...)``
-unimem_malloc      ``rt.alloc(name, size_bytes | payload, chunkable=...)``
-unimem_start/end   ``rt.run_iteration(...)`` / ``rt.phase(...)`` contexts
-PMPI wrapper       phase boundaries are declared by the caller (collective /
-                   jit-step boundaries), exactly as PMPI interception does
-=================  =========================================================
+unimem_malloc      ``rt.register(name, pytree_or_size, ...)``
+                   (deprecated: ``rt.alloc(name, size_bytes=...)``)
+unimem_start/end   ``with rt.iteration(): with rt.phase("fwd"): ...``
+                   (deprecated: ``start_loop`` / ``begin_iteration`` /
+                   ``phase_begin`` / ``phase_end`` / ``end_iteration``)
+PMPI wrapper       phase boundaries are the ``rt.phase(...)`` contexts
+                   (collective / jit-step boundaries), exactly as PMPI
+                   interception delimits them
+=================  ==========================================================
 
-Workflow (paper §3.1): iteration 1 profiles each phase; at its end the
-planner builds a placement plan (best of phase-local / cross-phase-global);
-from iteration 2 on the proactive mover enforces the plan, and the variation
-monitor re-triggers profiling when a phase drifts >10%.
+All orchestration lives in :class:`~.session.Session`; the shims below
+delegate to the same internals the context managers use, so old-style and
+new-style drivers produce **bit-identical** plans (parity-tested).  New
+code should use the session API; the shims emit ``DeprecationWarning``.
 
-**Incremental replanning** (beyond the paper): when the monitor fires, the
-runtime does *not* throw the plan away and serve unplaced iterations while
-it re-profiles.  Instead it keeps executing the current plan, down-weights
-the accumulated profiles (:meth:`PhaseProfiler.decay`) so the next profiled
-iterations dominate, and then rebuilds the plan from the *current* registry
-tier state — the planner's initial residents are whatever the old plan left
-in the fast tier, so the emitted moves are exactly the diff between the old
-and new placements.  Once a first plan exists, ``self.plan`` is never None
-again.
-
-**Per-chunk attribution** (``RuntimeConfig.chunk_aware``): instrumentation
-may report each object's access distribution over its byte range
-(``phase_end(..., access_bins=...)``).  The profiler resamples it with
-seeded multinomial noise; ``auto_partition`` then splits chunkable objects
-along the measured access CDF (skew-aware bisection) and per-phase chunk
-reference counts come from histogram mass rather than uniform size
-fractions — so the knapsack can pick exactly the hot head of a skewed
-object.  With ``chunk_aware=False`` the runtime reproduces the paper's
-object-granularity profiling and equal chunking.
+See :mod:`.session` for the workflow semantics (profile -> plan -> move ->
+monitor, incremental replanning, per-chunk attribution) and
+:mod:`.instrumentation` / :mod:`.backends` for the pluggable
+instrumentation-source and copy-backend layers.
 """
 
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-import time as _time
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+import warnings
+from typing import Any, Dict, List, Optional, Sequence
 
-from . import initial as initial_mod
-from . import partition as partition_mod
-from .data_objects import DataObject, ObjectRegistry
-from .monitor import VariationMonitor
-from .mover import (JaxTierBackend, ProactiveMover, SlackAwareMover,
-                    TierBackend)
-from .perfmodel import CalibrationConstants
-from .phase import Phase, PhaseGraph, PhaseKind, PhaseTraceEvent
-from .planner import PlacementPlan, Planner
-from .profiler import PhaseProfiler
-from .tiers import MachineProfile
+from .data_objects import DataObject
+from .session import PhaseContext, RuntimeConfig, Session
+
+__all__ = ["RuntimeConfig", "UnimemRuntime", "PhaseContext"]
 
 
-@dataclasses.dataclass
-class RuntimeConfig:
-    fast_capacity_bytes: Optional[int] = None   # default: machine.fast.capacity
-    enable_initial_placement: bool = True
-    enable_partitioning: bool = True
-    enable_local_search: bool = True
-    enable_global_search: bool = True
-    drift_threshold: float = 0.10
-    profile_iterations: int = 1
-    seed: int = 0
-    # Migration engine: "slack" = slack-aware multi-channel scheduler (the
-    # overlap engine), "fifo" = the paper's single-queue phase-boundary mover.
-    mover: str = "slack"
-    copy_channels: int = 2          # concurrent copy channels ("slack" only)
-    # Hot-chunk placement pipeline: ingest per-chunk attribution
-    # (access_bins), partition along the measured access CDF, attribute
-    # chunk references from histogram mass.  False reproduces the paper's
-    # object-granularity profiling + equal chunking.
-    chunk_aware: bool = True
-    # Drift response: keep serving the current plan while re-profiling, then
-    # emit only the diff moves.  False restores the paper's full reset
-    # (plan dropped, iterations served unplaced until re-profiled).
-    incremental_replan: bool = True
-    # How much accumulated profile weight survives a drift event (0 = start
-    # from scratch, 1 = new observations barely move the running means).
-    replan_decay: float = 0.25
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"UnimemRuntime.{old} is deprecated; use {new} "
+                  "(see README MIGRATION)", DeprecationWarning, stacklevel=3)
 
 
-class UnimemRuntime:
-    def __init__(self, machine: MachineProfile,
-                 config: Optional[RuntimeConfig] = None,
-                 backend: Optional[TierBackend] = None,
-                 cf: Optional[CalibrationConstants] = None):
-        self.machine = machine
-        self.config = config or RuntimeConfig()
-        self.registry = ObjectRegistry()
-        self.backend = backend or JaxTierBackend(machine)
-        self.cf = cf or CalibrationConstants()
-        self.capacity = (self.config.fast_capacity_bytes
-                         if self.config.fast_capacity_bytes is not None
-                         else machine.fast.capacity_bytes)
-        self.profiler = PhaseProfiler(machine, seed=self.config.seed)
-        self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
-        self.planner = Planner(machine, self.registry, self.cf, self.capacity)
-        self.mover: Optional[ProactiveMover] = None
-        self.plan: Optional[PlacementPlan] = None
-        self.graph: Optional[PhaseGraph] = None
-        self._phase_names: List[str] = []
-        self._iteration = 0
-        self._events_this_iter: List[PhaseTraceEvent] = []
-        self._profiling = True
-        self._profiled_iters = 0
-        self._baseline_pending = False
-        self._static_refs: Dict[str, float] = {}
-        self.n_replans = 0              # drift-triggered replan cycles
-        self.n_incremental_replans = 0  # ... served without dropping the plan
+class UnimemRuntime(Session):
+    """The v2 :class:`~.session.Session` plus the paper's Table-2 imperative
+    API as deprecated, delegating shims."""
 
     # ------------------------------------------------------------- allocation
     def alloc(self, name: str, *, size_bytes: Optional[int] = None,
               payload: Any = None, chunkable: bool = False,
               pinned: bool = False,
               static_refs: Optional[float] = None) -> DataObject:
-        """``unimem_malloc``: register a target data object."""
-        if size_bytes is None:
-            if payload is None:
-                raise ValueError("need size_bytes or payload")
-            import jax
-            size_bytes = sum(l.size * l.dtype.itemsize
-                             for l in jax.tree_util.tree_leaves(payload))
-        obj = self.registry.alloc(name, int(size_bytes), chunkable=chunkable,
-                                  payload=payload, pinned=pinned)
-        if static_refs is not None:
-            self._static_refs[name] = static_refs
-        return obj
+        """Deprecated ``unimem_malloc`` shim -> :meth:`Session.register`."""
+        _deprecated("alloc(...)", "register(name, pytree_or_size, ...)")
+        return self.register(name, size_bytes=size_bytes, payload=payload,
+                             chunkable=chunkable, pinned=pinned,
+                             static_refs=static_refs)
 
     # ------------------------------------------------------------- main loop
     def start_loop(self, phase_names: List[str],
                    static_refs: Optional[Dict[str, float]] = None) -> None:
-        """``unimem_start``: declare the loop's phase structure."""
-        self._phase_names = list(phase_names)
+        """Deprecated ``unimem_start`` shim: declare the loop's phase
+        structure upfront.  The session auto-starts the loop and
+        auto-registers phases on first use instead."""
+        _deprecated("start_loop(...)",
+                    "with rt.iteration(): (phases auto-register)")
         self._static_refs.update(static_refs or {})
-        self._iteration = 0
-        self._profiling = True
-        self._profiled_iters = 0
-        self.graph = PhaseGraph([Phase(i, n) for i, n in enumerate(phase_names)])
-        self.mover = self._make_mover()
-        if self.config.enable_initial_placement and self._static_refs:
-            placed = initial_mod.initial_placement(
-                self.registry, self._static_refs, self.capacity)
-            place = getattr(self.backend, "place", None)
-            for name in placed:
-                if place is not None:   # allocation-time placement: no copy
-                    place(self.registry[name], "fast")
-                else:
-                    self.backend.start_move(self.registry[name], "fast")
-
-    def _make_mover(self):
-        if self.config.mover == "slack":
-            return SlackAwareMover(self.registry, self.backend)
-        if self.config.mover == "fifo":
-            return ProactiveMover(self.registry, self.backend)
-        raise ValueError(f"unknown mover {self.config.mover!r}")
+        self._start_loop(phase_names)
 
     def begin_iteration(self) -> None:
-        self._events_this_iter = []
+        _deprecated("begin_iteration()", "with rt.iteration():")
+        self._ensure_loop()
+        self._begin_iteration()
 
     def phase_begin(self, index: int) -> float:
-        """Enter phase ``index``: fence + trigger proactive moves.  Returns the
-        fence stall in seconds (simulated backends) — real backends block and
-        return 0."""
-        if self.plan is not None and self.mover is not None:
-            return self.mover.on_phase_start(self.plan, index,
-                                             len(self._phase_names))
-        return 0.0
+        _deprecated("phase_begin(i)", "with rt.phase(name):")
+        return self._phase_begin(index)
 
     def phase_end(self, index: int, *, elapsed: float,
                   accesses: Optional[Dict[str, float]] = None,
                   time_shares: Optional[Dict[str, float]] = None,
                   access_bins: Optional[Dict[str, Sequence[float]]] = None
                   ) -> None:
-        """Leave phase ``index``.  ``accesses`` are the true per-object
-        main-memory access counts for this execution (the instrumentation the
-        paper gets from PEBS sampling); ``access_bins`` optionally carries
-        each object's access distribution over its byte range (per-chunk
-        attribution — the sampled address histogram)."""
-        if not self.config.chunk_aware:
-            access_bins = None
-        ev = PhaseTraceEvent(phase_index=index, time=elapsed,
-                             accesses=dict(accesses or {}),
-                             time_shares=time_shares,
-                             access_bins=access_bins)
-        self._events_this_iter.append(ev)
-        if self._profiling:
-            self.profiler.observe(ev)
-        elif self._baseline_pending:
-            # First iteration after (re)planning: phase times now reflect the
-            # enacted placement — record them as the monitor baseline (the
-            # paper monitors performance *after* data movement).
-            self.monitor.set_baseline(index, elapsed)
-            if index == len(self._phase_names) - 1:
-                self._baseline_pending = False
-        else:
-            drift = self.monitor.observe(index, elapsed)
-            if drift is not None:
-                self._reprofile()
-
-    @contextlib.contextmanager
-    def phase(self, index: int, *, accesses: Optional[Dict[str, float]] = None):
-        """Context-manager wrapper over phase_begin/phase_end for real
-        (wall-clock) execution."""
-        self.phase_begin(index)
-        t0 = _time.perf_counter()
-        yield
-        self.phase_end(index, elapsed=_time.perf_counter() - t0,
-                       accesses=accesses)
+        _deprecated("phase_end(i, ...)",
+                    "with rt.phase(name, ...) / an InstrumentationSource")
+        self._phase_end(index, elapsed=elapsed, accesses=accesses,
+                        time_shares=time_shares, access_bins=access_bins)
 
     def end_iteration(self) -> None:
-        self._iteration += 1
-        if self._profiling:
-            self._profiled_iters += 1
-            if self._profiled_iters >= self.config.profile_iterations:
-                self._build_plan()
-                self._profiling = False
-                self._profiled_iters = 0
-
-    # ------------------------------------------------------------- internals
-    def _build_plan(self) -> None:
-        assert self.graph is not None
-        self.profiler.annotate_graph(self.graph)
-        if self.config.enable_partitioning:
-            newly = partition_mod.auto_partition(
-                self.registry, self.graph, self.capacity,
-                profiler=self.profiler,
-                skew_aware=self.config.chunk_aware)
-            if not newly:
-                # Replan with parents partitioned on an earlier build:
-                # annotate_graph just rewrote parent-name refs from the
-                # parent-keyed profiles, so re-attribute them to chunks with
-                # the freshest histograms.  (auto_partition already did this
-                # for anything it partitioned; without chunk_aware the
-                # profiler has no histograms and size fractions apply.)
-                partition_mod.resplit_refs(self.graph, self.registry,
-                                           self.profiler)
-        plans = []
-        if self.config.enable_local_search:
-            plans.append(self.planner.plan_local(self.graph, self.profiler))
-        if self.config.enable_global_search:
-            plans.append(self.planner.plan_global(self.graph, self.profiler))
-        if not plans:
-            self.plan = None
-            return
-        self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
-        self._baseline_pending = True
-        self.monitor.consume_events()
-        # Enact iteration-start moves for the new plan immediately.
-        if self.mover is not None:
-            if hasattr(self.mover, "load_plan"):
-                self.mover.load_plan(self.plan, self.graph)
-            self.mover.on_phase_start(self.plan, 0, len(self._phase_names))
-
-    def _reprofile(self) -> None:
-        """Drift response.  Incremental (default): keep serving the current
-        plan, decay the profile history so fresh observations dominate, and
-        rebuild from the live tier state when enough iterations re-profiled —
-        the plan is never dropped, so no iteration runs unplaced.  Legacy:
-        the paper's full reset."""
-        self.n_replans += 1
-        if self.config.incremental_replan and self.plan is not None:
-            self.n_incremental_replans += 1
-            self.profiler.decay(self.config.replan_decay)
-            self._profiling = True
-            self._profiled_iters = 0
-        else:
-            self.profiler.clear()
-            self._profiling = True
-            self._profiled_iters = 0
-            self.plan = None
-            self._iteration = 0
-        # Drift fires mid-iteration: the phases already executed this
-        # iteration (including the drifted one) were routed to the monitor,
-        # not the profiler — replay them so the re-profiling window covers
-        # the full iteration, not just the phases after the drift.
-        for ev in self._events_this_iter:
-            self.profiler.observe(ev)
-
-    # ------------------------------------------------------------- reporting
-    def stats(self) -> Dict[str, Any]:
-        mv = self.mover.stats if self.mover else None
-        busy = getattr(self.backend, "busy_seconds", None)
-        copy_busy_s = busy() if busy is not None else None
-        overlap_time = None
-        if copy_busy_s and mv is not None:
-            overlap_time = max(0.0, 1.0 - mv.fence_stall_s / copy_busy_s)
-        return dict(
-            iteration=self._iteration,
-            strategy=self.plan.strategy if self.plan else None,
-            predicted_iteration_time=(self.plan.predicted_iteration_time
-                                      if self.plan else None),
-            mover=self.config.mover,
-            n_moves=mv.n_moves if mv else 0,
-            moved_bytes=mv.moved_bytes if mv else 0,
-            overlap_fraction=mv.overlap_fraction if mv else None,
-            fence_stall_s=mv.fence_stall_s if mv else 0.0,
-            copy_busy_s=copy_busy_s,
-            overlap_time_fraction=overlap_time,
-            fast_resident_bytes=self.registry.bytes_in_tier("fast"),
-            n_objects=len(self.registry),
-            n_replans=self.n_replans,
-            n_incremental_replans=self.n_incremental_replans,
-        )
+        _deprecated("end_iteration()", "with rt.iteration():")
+        self._end_iteration()

@@ -1,0 +1,504 @@
+"""Runtime session — the v2 user-facing surface of the Unimem runtime.
+
+The paper's Table-2 API (``unimem_malloc`` / ``unimem_start`` /
+``unimem_end``) is imperative: every driver repeats the same
+``alloc -> start_loop -> begin_iteration -> phase_begin/phase_end``
+choreography and hand-feeds instrumentation dicts into each ``phase_end``.
+The session keeps the paper's workflow (Fig 8: profile -> model -> plan ->
+move -> monitor) but makes the instrumented path the zero-effort path:
+
+* :meth:`register` is **pytree-native**: pass a JAX pytree (arrays or
+  ``ShapeDtypeStruct``\\ s) and the session records the object's size *and*
+  each leaf's byte span, so chunk attribution can align to leaf boundaries
+  and :class:`~.instrumentation.XlaCostAnalysisSource` can map compiled
+  programs back onto the object.
+* the loop is two context managers — ``with rt.iteration():`` around the
+  step, ``with rt.phase("fwd"):`` around each phase.  Phases
+  **auto-register on first use** (no upfront name list), timing is
+  captured by the context, and an exception can never leave a phase open.
+* instrumentation comes from a pluggable
+  :class:`~.instrumentation.InstrumentationSource` (manual dicts, the
+  simulator's physics, XLA cost analysis); explicit keyword overrides on
+  ``phase(...)`` always win.
+* the copy engine is resolved from the string-keyed backend registry
+  (``RuntimeConfig.backend`` -> :mod:`.backends`), not constructor wiring.
+
+``UnimemRuntime`` (:mod:`.runtime`) subclasses this session and keeps the
+old imperative methods as deprecated shims, so every pre-v2 driver runs
+unchanged — and produces bit-identical plans, since the shims delegate to
+the same internals (parity-tested in ``tests/test_api_v2.py``).
+
+Workflow semantics (unchanged from the paper + earlier PRs): iteration 1
+profiles each phase; at its end the planner builds a placement plan (best
+of phase-local / cross-phase-global); from iteration 2 on the proactive
+mover enforces the plan and the variation monitor re-triggers profiling on
+>10% drift — incrementally by default (the plan is never dropped once
+built; see ``RuntimeConfig.incremental_replan``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time as _time
+from typing import Any, Dict, List, Optional, Sequence
+
+from . import backends as backends_mod
+from . import initial as initial_mod
+from . import partition as partition_mod
+from .data_objects import DataObject, ObjectRegistry
+from .instrumentation import InstrumentationSource, PhaseSample
+from .monitor import VariationMonitor
+from .mover import ProactiveMover, SlackAwareMover, TierBackend
+from .perfmodel import CalibrationConstants
+from .phase import Phase, PhaseGraph, PhaseTraceEvent
+from .planner import PlacementPlan, Planner
+from .profiler import PhaseProfiler
+from .tiers import MachineProfile
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    fast_capacity_bytes: Optional[int] = None   # default: machine.fast.capacity
+    enable_initial_placement: bool = True
+    enable_partitioning: bool = True
+    enable_local_search: bool = True
+    enable_global_search: bool = True
+    drift_threshold: float = 0.10
+    profile_iterations: int = 1
+    seed: int = 0
+    # Migration engine: "slack" = slack-aware multi-channel scheduler (the
+    # overlap engine), "fifo" = the paper's single-queue phase-boundary mover.
+    mover: str = "slack"
+    copy_channels: int = 2          # concurrent copy channels ("slack" only)
+    # Copy backend, resolved through the string-keyed registry
+    # (:mod:`repro.core.backends`): "jax" = blocking device_put, "jax_async"
+    # = async device_put with per-leaf fencing, "sim" = the simulated copy
+    # engine (the simulator installs its own clock-wired instance).
+    backend: str = "jax"
+    # Hot-chunk placement pipeline: ingest per-chunk attribution
+    # (access_bins), partition along the measured access CDF, attribute
+    # chunk references from histogram mass.  False reproduces the paper's
+    # object-granularity profiling + equal chunking.
+    chunk_aware: bool = True
+    # Drift response: keep serving the current plan while re-profiling, then
+    # emit only the diff moves.  False restores the paper's full reset
+    # (plan dropped, iterations served unplaced until re-profiled).
+    incremental_replan: bool = True
+    # How much accumulated profile weight survives a drift event (0 = start
+    # from scratch, 1 = new observations barely move the running means).
+    replan_decay: float = 0.25
+
+
+@dataclasses.dataclass
+class PhaseContext:
+    """Handle yielded by ``with rt.phase(...) as pc`` — carries the fence
+    stall absorbed at entry and, after exit, the recorded elapsed time and
+    the instrumentation sample that was folded into the profiler."""
+
+    name: str
+    index: int
+    stall_s: float = 0.0
+    elapsed: float = 0.0
+    sample: Optional[PhaseSample] = None
+
+
+class Session:
+    """The v2 runtime session (see module docstring)."""
+
+    def __init__(self, machine: MachineProfile,
+                 config: Optional[RuntimeConfig] = None,
+                 backend: Optional[TierBackend] = None,
+                 cf: Optional[CalibrationConstants] = None):
+        self.machine = machine
+        self.config = config or RuntimeConfig()
+        self.registry = ObjectRegistry()
+        self.backend = backend if backend is not None else \
+            backends_mod.make_backend(
+                self.config.backend, machine,
+                mover=self.config.mover, channels=self.config.copy_channels)
+        self.cf = cf or CalibrationConstants()
+        self.capacity = (self.config.fast_capacity_bytes
+                         if self.config.fast_capacity_bytes is not None
+                         else machine.fast.capacity_bytes)
+        self.profiler = PhaseProfiler(machine, seed=self.config.seed)
+        self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
+        self.planner = Planner(machine, self.registry, self.cf, self.capacity)
+        self.mover: Optional[ProactiveMover] = None
+        self.plan: Optional[PlacementPlan] = None
+        self.graph: Optional[PhaseGraph] = None
+        self.source: Optional[InstrumentationSource] = None
+        self._phase_names: List[str] = []
+        self._phase_ids: Dict[str, int] = {}
+        self._loop_started = False
+        self._iter_open = False
+        self._open_phase: Optional[str] = None
+        self._iteration = 0
+        self._events_this_iter: List[PhaseTraceEvent] = []
+        self._profiling = True
+        self._profiled_iters = 0
+        self._baseline_pending = False
+        self._plan_n_phases = 0     # phase count the live plan was built on
+        self._static_refs: Dict[str, float] = {}
+        self.n_replans = 0              # drift-triggered replan cycles
+        self.n_incremental_replans = 0  # ... served without dropping the plan
+
+    # ------------------------------------------------------------ registration
+    def register(self, name: str, spec: Any = None, *,
+                 size_bytes: Optional[int] = None,
+                 payload: Any = None, chunkable: bool = False,
+                 pinned: bool = False,
+                 static_refs: Optional[float] = None,
+                 manage_payload: Optional[bool] = None) -> DataObject:
+        """``unimem_malloc``, pytree-native.
+
+        ``spec`` may be an integer byte size or a JAX pytree whose leaves
+        carry ``shape``/``dtype`` (real arrays or ``ShapeDtypeStruct``\\ s);
+        for a pytree, each leaf's byte span is recorded on the object so
+        downstream attribution can align to leaf boundaries.  Concrete
+        array pytrees are kept as the object's movable ``payload`` unless
+        ``manage_payload=False`` (register sizes only — the runtime then
+        tracks tiers logically, e.g. for donated training state).
+        ``static_refs`` feeds the initial-placement compiler analysis."""
+        leaf_spans = None
+        if spec is not None:
+            if isinstance(spec, int):
+                size_bytes = spec
+            else:
+                import jax
+                leaves_with_path = jax.tree_util.tree_flatten_with_path(spec)[0]
+                spans, off, concrete = [], 0, True
+                for path, leaf in leaves_with_path:
+                    shape = getattr(leaf, "shape", ())
+                    dtype = getattr(leaf, "dtype", None)
+                    if dtype is None:
+                        raise TypeError(
+                            f"leaf {jax.tree_util.keystr(path)} of {name!r} "
+                            "has no shape/dtype; register(size_bytes=...) "
+                            "for opaque objects")
+                    nbytes = int(dtype.itemsize)
+                    for d in shape:
+                        nbytes *= int(d)
+                    spans.append((jax.tree_util.keystr(path), off, nbytes))
+                    off += nbytes
+                    if isinstance(leaf, jax.ShapeDtypeStruct):
+                        concrete = False
+                leaf_spans = spans
+                size_bytes = off
+                if payload is None and concrete and manage_payload is not False:
+                    payload = spec
+        if size_bytes is None:
+            if payload is None:
+                raise ValueError(f"register({name!r}): need a pytree spec, "
+                                 "size_bytes, or payload")
+            import jax
+            size_bytes = sum(l.size * l.dtype.itemsize
+                             for l in jax.tree_util.tree_leaves(payload))
+        obj = self.registry.alloc(name, int(size_bytes), chunkable=chunkable,
+                                  payload=payload, pinned=pinned)
+        obj.leaf_spans = leaf_spans
+        if static_refs is not None:
+            self._static_refs[name] = static_refs
+        return obj
+
+    def attach_source(self, source: Optional[InstrumentationSource]) -> None:
+        """Install the instrumentation source consulted at every phase exit
+        (explicit keyword overrides on ``phase(...)`` still win)."""
+        self.source = source
+
+    # ------------------------------------------------------------- loop set-up
+    def _make_mover(self):
+        if self.config.mover == "slack":
+            return SlackAwareMover(self.registry, self.backend)
+        if self.config.mover == "fifo":
+            return ProactiveMover(self.registry, self.backend)
+        raise ValueError(f"unknown mover {self.config.mover!r}")
+
+    def _start_loop(self, phase_names: Sequence[str]) -> None:
+        """(Re)initialize loop state.  A re-entered loop must not inherit
+        the previous loop's plan, drift baselines, or accumulated profiles
+        (the ``start_loop`` re-entry bug): everything derived from profiled
+        iterations is reset here."""
+        self._phase_names = list(phase_names)
+        self._phase_ids = {n: i for i, n in enumerate(self._phase_names)}
+        self._iteration = 0
+        self._profiling = True
+        self._profiled_iters = 0
+        self.plan = None
+        self._baseline_pending = False
+        self._plan_n_phases = 0
+        self._events_this_iter = []
+        self._iter_open = False
+        self._open_phase = None
+        self.profiler.clear()
+        self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
+        self.graph = PhaseGraph(
+            [Phase(i, n) for i, n in enumerate(self._phase_names)])
+        self.mover = self._make_mover()
+        self._loop_started = True
+        if self.config.enable_initial_placement and self._static_refs:
+            placed = initial_mod.initial_placement(
+                self.registry, self._static_refs, self.capacity)
+            place = getattr(self.backend, "place", None)
+            for name in placed:
+                if place is not None:   # allocation-time placement: no copy
+                    place(self.registry[name], "fast")
+                else:
+                    self.backend.start_move(self.registry[name], "fast")
+
+    def _ensure_loop(self) -> None:
+        if not self._loop_started:
+            self._start_loop([])
+
+    def _phase_id(self, name: str) -> int:
+        """Resolve a phase name, auto-registering it on first use."""
+        idx = self._phase_ids.get(name)
+        if idx is not None:
+            return idx
+        idx = len(self._phase_names)
+        self._phase_ids[name] = idx
+        self._phase_names.append(name)
+        if self.graph is not None:
+            self.graph.phases.append(Phase(idx, name))
+        return idx
+
+    # --------------------------------------------------------------- contexts
+    @contextlib.contextmanager
+    def iteration(self):
+        """One main-loop iteration (``unimem_start``/``unimem_end``): the
+        loop auto-starts on first entry; profiling, planning and drift
+        bookkeeping run at exit.  An exception abandons the iteration's
+        buffered events so the next iteration starts clean."""
+        self._ensure_loop()
+        if self._iter_open:
+            raise RuntimeError("iterations cannot nest")
+        self._begin_iteration()
+        try:
+            yield self
+        except BaseException:
+            self._iter_open = False
+            self._open_phase = None
+            self._events_this_iter = []
+            raise
+        self._end_iteration()
+
+    @contextlib.contextmanager
+    def phase(self, name, *, accesses: Optional[Dict[str, float]] = None,
+              time_shares: Optional[Dict[str, float]] = None,
+              access_bins: Optional[Dict[str, Sequence[float]]] = None,
+              elapsed: Optional[float] = None):
+        """One phase of the iteration.  ``name`` is a phase name
+        (auto-registered on first use) or a pre-registered phase index.
+
+        Entry fences and triggers proactive moves; exit records the phase's
+        elapsed time (explicit ``elapsed`` > the source's virtual time >
+        the context's wall clock) and folds the instrumentation into the
+        profiler/monitor.  Explicit keyword instrumentation wins over the
+        attached source; an exception closes the phase without recording
+        (a crashed phase's timing is garbage), so a phase can never be
+        left open."""
+        self._ensure_loop()
+        if not self._iter_open:
+            raise RuntimeError(
+                f"phase({name!r}) outside an iteration; wrap the loop body "
+                "in `with rt.iteration():`")
+        if self._open_phase is not None:
+            raise RuntimeError(
+                f"phase {self._open_phase!r} is still open; phases cannot "
+                "nest")
+        if isinstance(name, int):
+            if not 0 <= name < len(self._phase_names):
+                raise IndexError(f"phase index {name} out of range "
+                                 f"(registered: {self._phase_names})")
+            index = name
+        else:
+            index = self._phase_id(name)
+        pname = self._phase_names[index]
+        self._open_phase = pname
+        stall = self._phase_begin(index)
+        ctx = PhaseContext(name=pname, index=index, stall_s=stall)
+        t0 = _time.perf_counter()
+        try:
+            yield ctx
+        except BaseException:
+            self._open_phase = None
+            raise
+        wall = _time.perf_counter() - t0
+        sample = None
+        if self.source is not None:
+            # per-field precedence: explicit keyword > source > measured
+            # (an explicit accesses override must not silently discard the
+            # source's virtual elapsed or its access_bins)
+            sample = self.source.collect(pname)
+            if accesses is None:
+                accesses = sample.accesses
+            if time_shares is None:
+                time_shares = sample.time_shares
+            if access_bins is None:
+                access_bins = sample.access_bins
+            if elapsed is None:
+                elapsed = sample.elapsed
+        ctx.elapsed = elapsed if elapsed is not None else wall
+        ctx.sample = sample
+        self._open_phase = None
+        self._phase_end(index, elapsed=ctx.elapsed, accesses=accesses,
+                        time_shares=time_shares, access_bins=access_bins)
+
+    # ------------------------------------------------------------- main loop
+    def _begin_iteration(self) -> None:
+        self._iter_open = True
+        self._events_this_iter = []
+
+    def _phase_begin(self, index: int) -> float:
+        """Enter phase ``index``: fence + trigger proactive moves.  Returns
+        the fence stall in seconds (simulated backends) — real backends
+        block and return 0.
+
+        The mover is driven with the phase count the plan was *built*
+        against, not the live one: auto-registration can grow the phase
+        list under a live plan (a conditional eval/ckpt phase entered
+        mid-loop), and a changed modulus would re-wrap negative
+        trigger_phase moves onto the wrong boundary.  A phase the plan has
+        never seen has no moves keyed to it — skip the mover entirely."""
+        if self.plan is not None and self.mover is not None:
+            n = self._plan_n_phases or len(self._phase_names)
+            if index >= n:
+                return 0.0
+            return self.mover.on_phase_start(self.plan, index, n)
+        return 0.0
+
+    def _phase_end(self, index: int, *, elapsed: float,
+                   accesses: Optional[Dict[str, float]] = None,
+                   time_shares: Optional[Dict[str, float]] = None,
+                   access_bins: Optional[Dict[str, Sequence[float]]] = None
+                   ) -> None:
+        """Leave phase ``index``.  ``accesses`` are the true per-object
+        main-memory access counts for this execution (the instrumentation
+        the paper gets from PEBS sampling); ``access_bins`` optionally
+        carries each object's access distribution over its byte range
+        (per-chunk attribution — the sampled address histogram)."""
+        if not self.config.chunk_aware:
+            access_bins = None
+        ev = PhaseTraceEvent(phase_index=index, time=elapsed,
+                             accesses=dict(accesses or {}),
+                             time_shares=time_shares,
+                             access_bins=access_bins)
+        self._events_this_iter.append(ev)
+        if self._profiling:
+            self.profiler.observe(ev)
+        elif self._baseline_pending:
+            # First iteration after (re)planning: phase times now reflect the
+            # enacted placement — record them as the monitor baseline (the
+            # paper monitors performance *after* data movement).
+            self.monitor.set_baseline(index, elapsed)
+            if index == len(self._phase_names) - 1:
+                self._baseline_pending = False
+        else:
+            drift = self.monitor.observe(index, elapsed)
+            if drift is not None:
+                self._reprofile()
+
+    def _end_iteration(self) -> None:
+        self._iter_open = False
+        self._iteration += 1
+        if self._profiling:
+            self._profiled_iters += 1
+            if self._profiled_iters >= self.config.profile_iterations:
+                self._build_plan()
+                self._profiling = False
+                self._profiled_iters = 0
+        elif self._baseline_pending and self._events_this_iter:
+            # variable phase sets: if the baseline iteration did not reach
+            # the last registered phase, close the baseline window here
+            self._baseline_pending = False
+
+    # ------------------------------------------------------------- internals
+    def _build_plan(self) -> None:
+        assert self.graph is not None
+        self.profiler.annotate_graph(self.graph)
+        if self.config.enable_partitioning:
+            newly = partition_mod.auto_partition(
+                self.registry, self.graph, self.capacity,
+                profiler=self.profiler,
+                skew_aware=self.config.chunk_aware)
+            if not newly:
+                # Replan with parents partitioned on an earlier build:
+                # annotate_graph just rewrote parent-name refs from the
+                # parent-keyed profiles, so re-attribute them to chunks with
+                # the freshest histograms.  (auto_partition already did this
+                # for anything it partitioned; without chunk_aware the
+                # profiler has no histograms and size fractions apply.)
+                partition_mod.resplit_refs(self.graph, self.registry,
+                                           self.profiler)
+        plans = []
+        if self.config.enable_local_search:
+            plans.append(self.planner.plan_local(self.graph, self.profiler))
+        if self.config.enable_global_search:
+            plans.append(self.planner.plan_global(self.graph, self.profiler))
+        if not plans:
+            self.plan = None
+            return
+        self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
+        self._plan_n_phases = len(self._phase_names)
+        self._baseline_pending = True
+        self.monitor.consume_events()
+        # Enact iteration-start moves for the new plan immediately.
+        if self.mover is not None:
+            if hasattr(self.mover, "load_plan"):
+                self.mover.load_plan(self.plan, self.graph)
+            self.mover.on_phase_start(self.plan, 0, self._plan_n_phases)
+
+    def _reprofile(self) -> None:
+        """Drift response.  Incremental (default): keep serving the current
+        plan, decay the profile history so fresh observations dominate, and
+        rebuild from the live tier state when enough iterations re-profiled —
+        the plan is never dropped, so no iteration runs unplaced.  Legacy:
+        the paper's full reset."""
+        self.n_replans += 1
+        if self.config.incremental_replan and self.plan is not None:
+            self.n_incremental_replans += 1
+            self.profiler.decay(self.config.replan_decay)
+            self._profiling = True
+            self._profiled_iters = 0
+        else:
+            self.profiler.clear()
+            self._profiling = True
+            self._profiled_iters = 0
+            self.plan = None
+            self._iteration = 0
+        # Drift fires mid-iteration: the phases already executed this
+        # iteration (including the drifted one) were routed to the monitor,
+        # not the profiler — replay them so the re-profiling window covers
+        # the full iteration, not just the phases after the drift.
+        for ev in self._events_this_iter:
+            self.profiler.observe(ev)
+
+    # ------------------------------------------------------------- reporting
+    def phase_names(self) -> List[str]:
+        """Registered phases in first-use order."""
+        return list(self._phase_names)
+
+    def stats(self) -> Dict[str, Any]:
+        mv = self.mover.stats if self.mover else None
+        busy = getattr(self.backend, "busy_seconds", None)
+        copy_busy_s = busy() if busy is not None else None
+        overlap_time = None
+        if copy_busy_s and mv is not None:
+            overlap_time = max(0.0, 1.0 - mv.fence_stall_s / copy_busy_s)
+        return dict(
+            iteration=self._iteration,
+            strategy=self.plan.strategy if self.plan else None,
+            predicted_iteration_time=(self.plan.predicted_iteration_time
+                                      if self.plan else None),
+            mover=self.config.mover,
+            n_moves=mv.n_moves if mv else 0,
+            moved_bytes=mv.moved_bytes if mv else 0,
+            overlap_fraction=mv.overlap_fraction if mv else None,
+            fence_stall_s=mv.fence_stall_s if mv else 0.0,
+            copy_busy_s=copy_busy_s,
+            overlap_time_fraction=overlap_time,
+            fast_resident_bytes=self.registry.bytes_in_tier("fast"),
+            n_objects=len(self.registry),
+            n_replans=self.n_replans,
+            n_incremental_replans=self.n_incremental_replans,
+        )

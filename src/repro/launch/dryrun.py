@@ -240,9 +240,60 @@ def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 
 # ---------------------------------------------------------------------------
+#: operand layout per cell mode: which positional args of the jitted step are
+#: registered Unimem objects (name) vs unregistered inputs (None -> leaf
+#: count taken from the example tree)
+_ATTRIBUTION_OPERANDS = {
+    "fused": ("params", "opt_state", None),
+    "offload-grads": ("params", None),
+    "prefill": ("params", None),
+    "decode": ("params", "kv_cache", None, None),
+}
+
+
+def unimem_attribution(compiled, args, mode: str,
+                       n_bins: int = 64) -> Dict[str, Any]:
+    """Map the compiled cell's per-op operand footprints onto Unimem data
+    objects (the TPU attribution analogue: no PEBS on TPU, so per-chunk
+    ``access_bins`` come from XLA cost analysis instead — and feed the
+    exact same profiler pipeline the simulator drives).
+
+    Registers each managed arg tree pytree-natively (recording leaf byte
+    spans), binds the compiled program through
+    :class:`~repro.core.instrumentation.XlaCostAnalysisSource`, and returns
+    a JSON-able summary of the measured per-object access histograms."""
+    from ..core.instrumentation import XlaCostAnalysisSource
+    from ..core.session import Session
+    from ..core.tiers import TPU_V5E
+
+    sess = Session(TPU_V5E)
+    operands = []
+    for name, tree in zip(_ATTRIBUTION_OPERANDS[mode], args):
+        if name is None:
+            operands.append(tree)
+        else:
+            sess.register(name, tree, chunkable=(name != "params"))
+            operands.append(name)
+    src = XlaCostAnalysisSource(sess, n_bins=n_bins)
+    sample = src.bind("step", compiled, operands)
+    out: Dict[str, Any] = {}
+    for obj, acc in sorted(sample.accesses.items()):
+        bins = np.asarray((sample.access_bins or {}).get(obj, []))
+        entry: Dict[str, Any] = {"accesses": float(acc)}
+        if bins.size and bins.sum() > 0:
+            w = bins / bins.sum()
+            entry["n_bins"] = int(bins.size)
+            entry["nonzero_bins"] = int((bins > 0).sum())
+            entry["peak_over_mean"] = float(w.max() * bins.size)
+            entry["bins"] = [round(float(x), 6) for x in w]
+        out[obj] = entry
+    return out
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              probes: bool = True, verbose: bool = True,
-             flat_dp: bool = False) -> Dict[str, Any]:
+             flat_dp: bool = False,
+             attribution: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = cfg.shape_applicable(shape)
@@ -311,6 +362,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "fits_hbm_tpu_estimate":
             mem["peak_tpu_estimate_bytes"] <= HBM_PER_CHIP,
     }
+
+    if attribution:
+        # hardware-path instrumentation: per-object access_bins from the
+        # compiled program's operand footprints (ROADMAP "TPU attribution
+        # analogue") — the same sample stream the simulator's SimSource
+        # produces, so it flows through the identical profiler pipeline
+        result["unimem_attribution"] = unimem_attribution(
+            compiled, args, info["mode"])
 
     if offload:
         result["offload"] = offload_programs(cfg, shape, mesh, opt_cfg)
@@ -421,6 +480,9 @@ def main() -> None:
     ap.add_argument("--multi-pod", choices=["off", "on", "both"],
                     default="off")
     ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--attribution", action="store_true",
+                    help="emit per-object Unimem access_bins from XLA "
+                         "cost-analysis operand footprints")
     ap.add_argument("--flat-dp", action="store_true",
                     help="fold the model axis into DP (small-model profile)")
     ap.add_argument("--out", default=None, help="directory for JSON results")
@@ -439,7 +501,7 @@ def main() -> None:
     for a, s, mp in cells:
         try:
             r = run_cell(a, s, multi_pod=mp, probes=not args.no_probes,
-                         flat_dp=args.flat_dp)
+                         flat_dp=args.flat_dp, attribution=args.attribution)
         except Exception as e:  # noqa: BLE001 — report and continue
             r = {"cell": f"{a}|{s}|{'2x16x16' if mp else '16x16'}",
                  "status": "error", "error": f"{type(e).__name__}: {e}"}

@@ -1,21 +1,22 @@
 """Discrete-event tier simulator (Quartz-emulator analogue, paper §4)."""
 
-from .engine import (PhaseExec, SimObjectAccess, SimPhaseSpec, SimWorkload,
-                     SimulationEngine, SimResult, simulate_stream_time,
-                     simulate_chase_time)
+from .engine import (PhaseExec, SimObjectAccess, SimPhaseSpec, SimSource,
+                     SimWorkload, SimulationEngine, SimResult,
+                     simulate_stream_time, simulate_chase_time)
 from .workloads import (cg_like, ft_like, bt_like, lu_like, sp_like, mg_like,
                         nek_like, NPB_WORKLOADS, lm_train_workload,
                         kv_serving, kv_serving_skewed, moe_expert_churn,
-                        graph_chase, graph_chase_skewed, power_law_density,
+                        graph_chase, graph_chase_skewed, paged_attention,
+                        power_law_density,
                         SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS)
 
 __all__ = [
-    "PhaseExec", "SimObjectAccess", "SimPhaseSpec", "SimWorkload",
-    "SimulationEngine", "SimResult", "simulate_stream_time",
+    "PhaseExec", "SimObjectAccess", "SimPhaseSpec", "SimSource",
+    "SimWorkload", "SimulationEngine", "SimResult", "simulate_stream_time",
     "simulate_chase_time",
     "cg_like", "ft_like", "bt_like", "lu_like", "sp_like", "mg_like",
     "nek_like", "NPB_WORKLOADS", "lm_train_workload",
     "kv_serving", "kv_serving_skewed", "moe_expert_churn", "graph_chase",
-    "graph_chase_skewed", "power_law_density",
+    "graph_chase_skewed", "paged_attention", "power_law_density",
     "SCENARIO_WORKLOADS", "SKEWED_SCENARIO_WORKLOADS",
 ]

@@ -1,8 +1,11 @@
 """Discrete-event simulation of phase execution on a two-tier memory.
 
-Stands in for the Quartz emulator (paper §4): phase execution time under a
-given placement is derived from each referenced object's access volume and
-*access pattern*:
+Stands in for the Quartz emulator (paper §4).  The physics live in
+:class:`SimSource` — an :class:`~repro.core.instrumentation.
+InstrumentationSource` that derives each phase's execution time and its
+instrumentation (true access counts, per-object time shares, per-chunk
+access densities) from the workload spec and the *current* registry tier
+state:
 
 * ``stream``-type accesses are bandwidth-bound: ``bytes / tier.bw`` (memory
   level parallelism hides latency);
@@ -12,24 +15,33 @@ given placement is derived from each referenced object's access volume and
 An object's pattern mixes the two with ``stream_fraction`` — this reproduces
 the paper's Observation 3 (objects can be bandwidth-sensitive,
 latency-sensitive, or both).  Phase time = scalar compute + the serialized
-memory time of its objects.  Migration copies run on a simulated copy engine
-matched to the runtime's configured mover — the FIFO baseline
-(``SimTierBackend``, one serial queue) or the slack-aware scheduler's
-multi-channel engine (``ChannelSimBackend``, concurrent copies with
-bandwidth contention, tier flips only on landing).  Fence stalls land on the
-critical path only when slack is exhausted; every phase execution is
-recorded in a virtual-time trace (``PhaseExec``) for invariant checks.
+memory time of its objects.
+
+:class:`SimulationEngine` is then just a virtual clock around the v2
+session API: each iteration is ``with rt.iteration():``, each phase a
+``with rt.phase(name):`` whose instrumentation the attached
+:class:`SimSource` supplies — the exact pipeline a hardware driver feeds
+through :class:`~repro.core.instrumentation.XlaCostAnalysisSource`.
+Migration copies run on the simulated copy engine from the backend
+registry (``make_backend("sim", ...)``) matched to the runtime's
+configured mover — the FIFO baseline (``SimTierBackend``, one serial
+queue) or the slack-aware scheduler's multi-channel engine
+(``ChannelSimBackend``, concurrent copies with bandwidth contention, tier
+flips only on landing).  Fence stalls land on the critical path only when
+slack is exhausted; every phase execution is recorded in a virtual-time
+trace (``PhaseExec``) for invariant checks.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.backends import make_backend
 from ..core.data_objects import ObjectRegistry
-from ..core.mover import ChannelSimBackend, SimTierBackend
+from ..core.instrumentation import PhaseSample
 from ..core.partition import bin_mass, chunk_spans
-from ..core.runtime import UnimemRuntime
+from ..core.session import Session
 from ..core.tiers import MachineProfile
 
 
@@ -108,55 +120,37 @@ class SimResult:
         return sum(p.stall_s for p in self.phase_trace)
 
 
-class SimulationEngine:
-    """Runs a SimWorkload for N iterations under a placement policy.
+class SimSource:
+    """Density-driven simulated instrumentation (the physics, migrated out
+    of the engine so any driver — or the parity tests — can consume the
+    exact event stream the simulator produces).
 
-    ``runtime=None`` simulates a *static* placement (whatever tiers the
-    registry currently holds) — used for DRAM-only / NVM-only / offline-
-    profiling baselines.  With a runtime, iteration 1 profiles and later
-    iterations follow the Unimem plan with proactive movement.
-    """
-
-    def __init__(self, machine: MachineProfile, workload: SimWorkload,
-                 runtime: Optional[UnimemRuntime] = None,
-                 registry: Optional[ObjectRegistry] = None):
-        self.machine = machine
-        self.workload = workload
-        self.clock = 0.0
-        if runtime is not None:
-            self.runtime = runtime
-            self.registry = runtime.registry
-            # swap in a simulated copy engine wired to our clock, matching
-            # the runtime's configured migration engine
-            if runtime.config.mover == "slack":
-                backend = ChannelSimBackend(
-                    machine, lambda: self.clock,
-                    channels=runtime.config.copy_channels)
-            else:
-                backend = SimTierBackend(machine, lambda: self.clock)
-            self.runtime.backend = backend
-            if self.runtime.mover is not None:
-                self.runtime.mover.backend = backend
-        else:
-            self.runtime = None
-            self.registry = registry if registry is not None else ObjectRegistry()
-            if registry is None:
-                for name, size in workload.objects.items():
-                    self.registry.alloc(name, size)
-
-    # ------------------------------------------------------------------
-    def object_tier(self, name: str):
-        # chunked objects: registry holds name#k chunks
-        if name in self.registry:
-            return self.registry[name].tier
-        return None
+    ``collect`` returns the phase's true access counts, PEBS-like per-object
+    time shares, each skewed object's true address histogram, and the
+    simulated phase duration as ``elapsed`` (virtual time)."""
 
     #: fraction of the smaller of (compute, memory) that cannot be hidden —
     #: out-of-order cores overlap most memory stalls with compute (MLP); 1.0
     #: would be fully serialized, 0.0 perfectly overlapped.
     serialization = 0.25
 
-    def phase_time(self, ph: SimPhaseSpec) -> tuple:
+    def __init__(self, machine: MachineProfile, workload: SimWorkload,
+                 registry: ObjectRegistry):
+        self.machine = machine
+        self.workload = workload
+        self.registry = registry
+        self._specs = {ph.name: ph for ph in workload.phases}
+        if len(self._specs) != len(workload.phases):
+            # phases are name-keyed through the session API; a duplicate
+            # would silently collapse onto the last spec's physics
+            dupes = sorted({ph.name for i, ph in enumerate(workload.phases)
+                            if any(q.name == ph.name
+                                   for q in workload.phases[:i])})
+            raise ValueError(
+                f"workload {workload.name!r} has duplicate phase names "
+                f"{dupes}; phase names must be unique")
+
+    def phase_time(self, ph: SimPhaseSpec) -> Tuple[float, Dict[str, float]]:
         """Returns (total_time, {logical_obj_name: memory_time})."""
         mem = 0.0
         obj_times: Dict[str, float] = {}
@@ -192,6 +186,72 @@ class SimulationEngine:
             + self.serialization * min(ph.compute_s, mem)
         return t, obj_times
 
+    def collect(self, phase_name: str) -> PhaseSample:
+        ph = self._specs[phase_name]
+        t_phase, obj_times = self.phase_time(ph)
+        # PEBS-like attribution: per-object share of phase time, plus each
+        # skewed object's true address histogram (the profiler resamples it
+        # with multinomial noise).
+        shares: Dict[str, float] = {}
+        for name in ph.touches:
+            tt = sum(v for k, v in obj_times.items()
+                     if k == name or k.startswith(name + "#"))
+            shares[name] = tt / t_phase if t_phase > 0 else 0.0
+        bins = {name: acc.density for name, acc in ph.touches.items()
+                if acc.density is not None}
+        return PhaseSample(accesses=ph.true_accesses(), time_shares=shares,
+                           access_bins=bins or None, elapsed=t_phase)
+
+
+class SimulationEngine:
+    """Runs a SimWorkload for N iterations under a placement policy.
+
+    ``runtime=None`` simulates a *static* placement (whatever tiers the
+    registry currently holds) — used for DRAM-only / NVM-only / offline-
+    profiling baselines.  With a runtime (a v2 :class:`Session` or the
+    ``UnimemRuntime`` facade), iteration 1 profiles and later iterations
+    follow the Unimem plan with proactive movement.
+    """
+
+    def __init__(self, machine: MachineProfile, workload: SimWorkload,
+                 runtime: Optional[Session] = None,
+                 registry: Optional[ObjectRegistry] = None):
+        self.machine = machine
+        self.workload = workload
+        self.clock = 0.0
+        if runtime is not None:
+            self.runtime = runtime
+            self.registry = runtime.registry
+            # swap in a simulated copy engine wired to our clock, resolved
+            # from the backend registry and matched to the runtime's
+            # configured migration engine
+            backend = make_backend(
+                "sim", machine, now_fn=lambda: self.clock,
+                mover=runtime.config.mover,
+                channels=runtime.config.copy_channels)
+            self.runtime.backend = backend
+            if self.runtime.mover is not None:
+                self.runtime.mover.backend = backend
+        else:
+            self.runtime = None
+            self.registry = registry if registry is not None else ObjectRegistry()
+            if registry is None:
+                for name, size in workload.objects.items():
+                    self.registry.alloc(name, size)
+        self.source = SimSource(machine, workload, self.registry)
+        if self.runtime is not None:
+            self.runtime.attach_source(self.source)
+
+    # ------------------------------------------------------------------
+    def object_tier(self, name: str):
+        # chunked objects: registry holds name#k chunks
+        if name in self.registry:
+            return self.registry[name].tier
+        return None
+
+    def phase_time(self, ph: SimPhaseSpec) -> tuple:
+        return self.source.phase_time(ph)
+
     # ------------------------------------------------------------------
     def run(self, n_iterations: int) -> SimResult:
         iter_times: List[float] = []
@@ -199,34 +259,22 @@ class SimulationEngine:
         for it in range(n_iterations):
             t_iter = 0.0
             if self.runtime is not None:
-                self.runtime.begin_iteration()
-            for i, ph in enumerate(self.workload.phases):
-                t_enter = self.clock
-                stall = 0.0
-                if self.runtime is not None:
-                    stall = self.runtime.phase_begin(i)
-                t_phase, obj_times = self.phase_time(ph)
-                trace.append(PhaseExec(it, i, t_enter, stall, t_phase))
-                self.clock += stall + t_phase
-                t_iter += stall + t_phase
-                if self.runtime is not None:
-                    # PEBS-like attribution: per-object share of phase time,
-                    # plus each skewed object's true address histogram (the
-                    # profiler resamples it with multinomial noise).
-                    shares = {}
-                    for name in ph.touches:
-                        tt = sum(v for k, v in obj_times.items()
-                                 if k == name or k.startswith(name + "#"))
-                        shares[name] = tt / t_phase if t_phase > 0 else 0.0
-                    bins = {name: acc.density
-                            for name, acc in ph.touches.items()
-                            if acc.density is not None}
-                    self.runtime.phase_end(i, elapsed=t_phase,
-                                           accesses=ph.true_accesses(),
-                                           time_shares=shares,
-                                           access_bins=bins or None)
-            if self.runtime is not None:
-                self.runtime.end_iteration()
+                with self.runtime.iteration():
+                    for i, ph in enumerate(self.workload.phases):
+                        t_enter = self.clock
+                        with self.runtime.phase(ph.name) as pc:
+                            pass        # the SimSource supplies the physics
+                        trace.append(PhaseExec(it, i, t_enter, pc.stall_s,
+                                               pc.elapsed))
+                        self.clock += pc.stall_s + pc.elapsed
+                        t_iter += pc.stall_s + pc.elapsed
+            else:
+                for i, ph in enumerate(self.workload.phases):
+                    t_enter = self.clock
+                    t_phase, _ = self.source.phase_time(ph)
+                    trace.append(PhaseExec(it, i, t_enter, 0.0, t_phase))
+                    self.clock += t_phase
+                    t_iter += t_phase
             iter_times.append(t_iter)
         stats = self.runtime.stats() if self.runtime is not None else {}
         return SimResult(iter_times, sum(iter_times), stats, trace)

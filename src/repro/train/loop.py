@@ -10,6 +10,7 @@ monitor doubles as the straggler detector and triggers re-planning.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
@@ -19,7 +20,7 @@ import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs.base import ArchConfig
-from ..core import RuntimeConfig, UnimemRuntime
+from ..core import ManualSource, RuntimeConfig, UnimemRuntime
 from ..core.tiers import TPU_V5E, MachineProfile
 from ..data import DataConfig, SyntheticTokenPipeline
 from ..models import lm
@@ -72,41 +73,37 @@ def train(cfg: ArchConfig, tcfg: TrainConfig,
         start_step, state = ckpt.restore()
         params, opt_state = state["params"], state["opt"]
 
-    # ---- Unimem runtime: optimizer-state groups are the tierable objects
+    # ---- Unimem runtime: optimizer-state groups are the tierable objects.
+    # Pytree-native registration records per-leaf byte spans (chunk
+    # boundaries can align to them); the state is donated through step_fn,
+    # so tiers are tracked logically (manage_payload=False).  The "step"
+    # phase's per-object access counts are static for a fixed step function,
+    # so a ManualSource states them once instead of every phase_end.
     rt: Optional[UnimemRuntime] = None
     if tcfg.use_unimem:
         rt = UnimemRuntime(tcfg.machine, RuntimeConfig(
             fast_capacity_bytes=tcfg.machine.fast.capacity_bytes))
-        rt.alloc("opt_state", payload=None,
-                 size_bytes=tree_bytes(opt_state), chunkable=True)
-        rt.alloc("params", payload=None, size_bytes=tree_bytes(params),
-                 pinned=True)
-        rt.start_loop(["data", "step", "ckpt"])
+        rt.register("opt_state", opt_state, chunkable=True,
+                    manage_payload=False)
+        rt.register("params", params, pinned=True, manage_payload=False)
+        src = ManualSource()
+        src.set("step", accesses={"opt_state": tree_bytes(opt_state) / 512,
+                                  "params": tree_bytes(params) / 512})
+        rt.attach_source(src)
 
     losses, times = [], []
     for step in range(start_step, tcfg.steps):
         t0 = time.perf_counter()
-        if rt:
-            rt.begin_iteration()
-            rt.phase_begin(0)
-        batch = data.batch_at(step)
-        if rt:
-            rt.phase_end(0, elapsed=time.perf_counter() - t0)
-            rt.phase_begin(1)
-        t1 = time.perf_counter()
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        loss = float(metrics["loss"])
-        if rt:
-            rt.phase_end(1, elapsed=time.perf_counter() - t1,
-                         accesses={"opt_state": tree_bytes(opt_state) / 512,
-                                   "params": tree_bytes(params) / 512})
-            rt.phase_begin(2)
-        t2 = time.perf_counter()
-        if ckpt is not None and (step + 1) % tcfg.checkpoint_every == 0:
-            ckpt.save(step + 1, {"params": params, "opt": opt_state})
-        if rt:
-            rt.phase_end(2, elapsed=time.perf_counter() - t2)
-            rt.end_iteration()
+        with rt.iteration() if rt else contextlib.nullcontext():
+            with rt.phase("data") if rt else contextlib.nullcontext():
+                batch = data.batch_at(step)
+            with rt.phase("step") if rt else contextlib.nullcontext():
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+            with rt.phase("ckpt") if rt else contextlib.nullcontext():
+                if ckpt is not None \
+                        and (step + 1) % tcfg.checkpoint_every == 0:
+                    ckpt.save(step + 1, {"params": params, "opt": opt_state})
         losses.append(loss)
         times.append(time.perf_counter() - t0)
         if (step + 1) % tcfg.log_every == 0:

@@ -1,0 +1,186 @@
+"""Instrumentation sources: XLA cost-analysis attribution end to end.
+
+Acceptance (ISSUE 3): ``XlaCostAnalysisSource`` must produce *non-uniform*
+``access_bins`` from a dry-run cell (a lowered/compiled XLA program) that
+flow through the hot-chunk pipeline — profiler multinomial resampling,
+skew-aware partitioning, histogram-mass chunk attribution, knapsack
+placement — exactly like the simulator's density stream does.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PAPER_DRAM_NVM, PhaseSample, RuntimeConfig, Session,
+                        XlaCostAnalysisSource, calibrate)
+from repro.core.partition import chunk_spans
+
+MACHINE = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+CF = calibrate(MACHINE)
+KB = 1024
+
+#: a "table" of 8 equal leaves; leaf 0 is read by several ops per step, the
+#: tail leaves once each — the hot-head shape the pipeline must discover
+N_LEAVES = 8
+LEAF_SHAPE = (64, 1024)                      # 256 KiB per leaf (f32)
+LEAF_BYTES = 64 * 1024 * 4
+
+
+def _table_specs():
+    return {f"l{i:02d}": jax.ShapeDtypeStruct(LEAF_SHAPE, jnp.float32)
+            for i in range(N_LEAVES)}
+
+
+def _step_fn(table, x):
+    """Leaf l00 feeds four separate ops; every other leaf one op."""
+    acc = table["l00"] @ x
+    acc = acc + table["l00"].sum()
+    acc = acc * table["l00"].mean()
+    out = acc + table["l00"][0, 0]
+    for i in range(1, N_LEAVES):
+        out = out + (table[f"l{i:02d}"] @ x)
+    return out.sum()
+
+
+def _lowered():
+    specs = _table_specs()
+    x = jax.ShapeDtypeStruct((1024, 4), jnp.float32)
+    return jax.jit(_step_fn).lower(specs, x), specs, x
+
+
+# ---------------------------------------------------------------------------
+def test_mlir_attribution_is_non_uniform():
+    lowered, specs, _ = _lowered()
+    sess = Session(MACHINE)
+    obj = sess.register("table", specs, chunkable=True)
+    src = XlaCostAnalysisSource(sess, n_bins=64)
+    sample = src.bind("step", lowered, ["table", 1])
+    assert sample.accesses["table"] > 0
+    bins = np.asarray(sample.access_bins["table"])
+    assert bins.shape == (64,)
+    w = bins / bins.sum()
+    # leaf 0 covers bins [0, 8); its extra fan-out must concentrate mass
+    head = w[: 64 // N_LEAVES].sum()
+    assert head > 2.0 / N_LEAVES            # >2x the uniform share
+    tail = w[64 // N_LEAVES:]
+    assert head > tail.max() * 2
+    # accesses follow the operand footprint: 4 + 7 leaf reads
+    expected = (4 + (N_LEAVES - 1)) * LEAF_BYTES / MACHINE.cacheline_bytes
+    assert sample.accesses["table"] == pytest.approx(expected, rel=0.01)
+    assert obj.leaf_spans is not None and len(obj.leaf_spans) == N_LEAVES
+
+
+def test_compiled_hlo_attribution_parses():
+    """The compiled-HLO text parser also attributes (fusion may merge uses,
+    so only structure is asserted, not exact fan-out)."""
+    lowered, specs, _ = _lowered()
+    compiled = lowered.compile()
+    sess = Session(MACHINE)
+    sess.register("table", specs, chunkable=True)
+    src = XlaCostAnalysisSource(sess, n_bins=64)
+    sample = src.bind("step", compiled, ["table", 1])
+    assert sample.accesses.get("table", 0) > 0
+    assert sample.access_bins and "table" in sample.access_bins
+
+
+def test_mlir_private_helper_funcs_not_charged_to_entry_params():
+    """lax.scan lowers to a private func.func that re-declares %argN; its
+    uses must not inflate the entry parameters' footprints (regression)."""
+    def f(p, x):
+        def body(c, _):
+            return c @ p["w"], ()
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out.sum() + p["b"].sum()
+    specs = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32),
+             "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    lowered = jax.jit(f).lower(specs, jax.ShapeDtypeStruct((8, 8),
+                                                           jnp.float32))
+    assert "func.func private" in lowered.as_text()   # the hazard exists
+    sess = Session(MACHINE)
+    sess.register("p", specs)
+    src = XlaCostAnalysisSource(sess, n_bins=8)
+    s = src.bind("step", lowered, ["p", 1])
+    # each leaf is read exactly once in @main: (256 + 32) bytes / cacheline
+    expected = (8 * 8 * 4 + 8 * 4) / MACHINE.cacheline_bytes
+    assert s.accesses["p"] == pytest.approx(expected)
+
+
+def test_hlo_param_counting_requires_both_boundaries():
+    """`param_0` must not match inside `fused_param_0` (HLO names can be
+    printed without the % sigil)."""
+    from repro.core.instrumentation import _hlo_param_uses
+    text = """ENTRY %main {
+  param_0 = f32[8]{0} parameter(0)
+  param_1 = f32[8]{0} parameter(1)
+  fused_param_0 = f32[8]{0} add(param_1, param_1)
+  out = f32[8]{0} add(param_0, fused_param_0)
+}
+"""
+    uses = _hlo_param_uses(text)
+    assert uses[0] == 1                  # only the true use, not the suffix
+    assert uses[1] == 2
+
+
+def test_sim_source_rejects_duplicate_phase_names():
+    """Name-keyed phases: a workload with two phases of one name would
+    silently collapse onto the last spec's physics — must raise."""
+    from repro.core.data_objects import ObjectRegistry
+    from repro.sim import SimObjectAccess, SimPhaseSpec, SimSource, SimWorkload
+    wl = SimWorkload("dup", [
+        SimPhaseSpec("compute", 0.01, {"a": SimObjectAccess(accesses=100.0)}),
+        SimPhaseSpec("io", 0.01, {"a": SimObjectAccess(accesses=10.0)}),
+        SimPhaseSpec("compute", 0.01, {"a": SimObjectAccess(accesses=50.0)}),
+    ], {"a": 1024})
+    with pytest.raises(ValueError, match="compute"):
+        SimSource(MACHINE, wl, ObjectRegistry())
+
+
+def test_unbound_phase_collects_empty_sample():
+    sess = Session(MACHINE)
+    src = XlaCostAnalysisSource(sess)
+    s = src.collect("never_bound")
+    assert isinstance(s, PhaseSample) and s.accesses == {}
+
+
+# ---------------------------------------------------------------------------
+def test_xla_bins_flow_through_hotchunk_pipeline_end_to_end():
+    """Acceptance: the dry-run attribution drives the full pipeline — the
+    profiler resamples the XLA histogram, skew-aware bisection cuts the
+    table along it, and the planner keeps the hot head fast-resident while
+    the cold tail stays evictable."""
+    lowered, specs, _ = _lowered()
+    cap = 1 * 1024 * KB                      # 1 MiB: the 2 MiB table can't fit
+    rt = Session(MACHINE, RuntimeConfig(fast_capacity_bytes=cap,
+                                        mover="fifo", backend="jax"),
+                 cf=CF)
+    rt.register("table", specs, chunkable=True)
+    src = XlaCostAnalysisSource(rt, n_bins=64)
+    # elapsed such that the table's footprint is bandwidth-class
+    # (accessed bytes / phase time well above T1 * slow-tier peak)
+    src.bind("step", lowered, ["table", 1], elapsed=5e-4)
+    rt.attach_source(src)
+
+    for _ in range(3):
+        with rt.iteration():
+            with rt.phase("step"):
+                pass
+
+    assert rt.plan is not None
+    # the profiler's measured histogram is non-uniform (resampled XLA bins)
+    bins = rt.profiler.object_bins("table")
+    assert bins, "no per-chunk attribution reached the profiler"
+    w = next(iter(bins.values()))
+    assert w.max() > 2.0 * w.mean()
+    # the table was partitioned along the measured density
+    spans = chunk_spans(rt.registry, "table")
+    assert len(spans) > 1
+    # the hot head (leaf 0's span) is fast-resident; the whole table is not
+    size = sum(c.size_bytes for c, _, _ in spans)
+    hot_chunks = [c for c, lo, hi in spans if lo < size // N_LEAVES]
+    assert hot_chunks and all(c.tier == "fast" for c in hot_chunks)
+    assert any(c.tier == "slow" for c, _, _ in spans)
+    # and the final plan keeps the hot head resident in its phase
+    residents = rt.plan.residents[0]
+    assert any(c.name in residents for c in hot_chunks)
