@@ -28,11 +28,14 @@ from typing import Dict, Tuple
 # watched metrics: prefix -> (keys, higher_is_worse, rel tolerance)
 WATCHES = {
     "scenario_": (("fifo", "slack", "uniform", "hotchunk"), True, 0.05),
-    "planner_": (("speedup",), False, 0.50),
+    "planner_": (("speedup", "scoped_speedup"), False, 0.50),
 }
 # absolute floors: (row prefix, key) -> minimum acceptable value
 FLOORS = {
     ("planner_n2000", "speedup"): 10.0,
+    # scoped replan on single-phase drift at 2k chunks must stay >=5x
+    # faster than a full replan (the scoped-replan latency gate)
+    ("planner_replan_n2000", "scoped_speedup"): 5.0,
 }
 
 

@@ -325,10 +325,10 @@ def bench_planner() -> None:
             prof.observe(PhaseTraceEvent(i, times[i], dict(rr)))
         prof.annotate_graph(graph)
         resplit_refs(graph, reg)    # parent refs -> size-fraction chunk refs
-        return reg, graph, prof
+        return reg, graph, prof, refs, times
 
     for n in (100, 500, 2000):
-        reg, graph, prof = build(n)
+        reg, graph, prof, _, _ = build(n)
         plans, lat = {}, {}
         for mode, vec in (("vectorized", True), ("legacy", False)):
             planner = Planner(mach, reg, CalibrationConstants(),
@@ -350,6 +350,56 @@ def bench_planner() -> None:
              f"vectorized_us={lat['vectorized']:.0f};"
              f"speedup={lat['legacy'] / lat['vectorized']:.1f};"
              f"plans_equal={equal}")
+
+    # ---- scoped replan vs full replan at 2k chunks, single-phase drift ----
+    # The fixture mirrors a layered training loop (32 phases — modest next
+    # to lm_train_workload's 72 at 96 layers / 4 per group).  The drift is
+    # a single phase's access *intensity* shifting (same reference set,
+    # counts scaled, time held) — the localized-drift case the scoped
+    # response targets.  The scoped replan must (a) produce exactly the
+    # full replan's plan and (b) be >=5x faster (nightly floor).
+    n, n_phases = 2000, 32
+    reg, graph, prof, refs, times = build(n, n_phases=n_phases)
+    rng = random.Random(1)
+    planner = Planner(mach, reg, CalibrationConstants(), DEFAULT_DRAM)
+    local = planner.plan_local(graph, prof)
+    glob = planner.plan_global(graph, prof)
+    drift = n_phases - 1
+    prof.decay(0.25, phases=[drift])
+    drifted_refs = {k: v * rng.uniform(0.5, 2.0)
+                    for k, v in refs[drift].items()}
+    prof.observe(PhaseTraceEvent(drift, times[drift], drifted_refs))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg)
+
+    best_full = best_scoped = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        full = planner.plan(graph, prof)
+        best_full = min(best_full, time.perf_counter() - t0)
+    for _ in range(3):
+        t0 = time.perf_counter()
+        scoped = planner.plan(graph, prof,
+                              standing=local.phase_decisions,
+                              standing_global=glob.global_contribs,
+                              standing_digest=local.graph_digest)
+        best_scoped = min(best_scoped, time.perf_counter() - t0)
+    equal = (full.moves == scoped.moves
+             and full.residents == scoped.residents
+             and full.predicted_iteration_time
+             == scoped.predicted_iteration_time
+             and full.strategy == scoped.strategy)
+    if not equal:
+        raise RuntimeError("scoped replan diverged from the full replan")
+    sl = planner.plan_local(graph, prof, standing=local.phase_decisions,
+                            standing_digest=local.graph_digest)
+    reused = sum(1 for d in sl.phase_decisions if d.reused)
+    emit(f"planner_replan_n{n}", best_scoped * 1e6,
+         f"full_us={best_full * 1e6:.0f};"
+         f"scoped_us={best_scoped * 1e6:.0f};"
+         f"scoped_speedup={best_full / best_scoped:.1f};"
+         f"reused={reused}/{n_phases};"
+         f"plans_equal={equal}")
     write_rows("planner_latency.csv", "planner_")
 
 

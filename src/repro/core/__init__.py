@@ -7,15 +7,18 @@ from .instrumentation import (InstrumentationSource, ManualSource,
                               PhaseSample, XlaCostAnalysisSource)
 from .knapsack import Item, solve as knapsack_solve
 from .monitor import VariationMonitor
-from .mover import (AsyncJaxTierBackend, ChannelSimBackend, JaxTierBackend,
-                    MoveRecord, ProactiveMover, SimTierBackend,
-                    SlackAwareMover)
+from .mover import (AsyncJaxTierBackend, ChannelSimBackend, CpuPoolBackend,
+                    JaxTierBackend, MoveRecord, ProactiveMover,
+                    SimTierBackend, SlackAwareMover)
 from .perfmodel import (CalibrationConstants, Sensitivity, benefit, calibrate,
                         classify, consumed_bandwidth, movement_cost, weight)
 from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
                     build_phase_graph)
-from .planner import (MoveOp, PlacementPlan, Planner, ScheduledMove,
-                      emit_schedule)
+from .planner import (MoveOp, PhaseDecision, PlacementPlan, Planner,
+                      ScheduledMove, emit_schedule)
+from .policy import (PipelineState, PlacementPolicy, PlanProgram,
+                     StageProvenance, UnimemPolicy, available_policies,
+                     make_policy, register_policy)
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
 from .session import PhaseContext, Session
@@ -26,7 +29,7 @@ from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
 __all__ = [
     "DataObject", "ObjectRegistry", "Item", "knapsack_solve",
     "VariationMonitor", "JaxTierBackend", "AsyncJaxTierBackend",
-    "ProactiveMover", "SimTierBackend",
+    "CpuPoolBackend", "ProactiveMover", "SimTierBackend",
     "ChannelSimBackend", "SlackAwareMover", "MoveRecord",
     "available_backends", "make_backend", "register_backend",
     "InstrumentationSource", "ManualSource", "PhaseSample",
@@ -34,7 +37,10 @@ __all__ = [
     "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
     "consumed_bandwidth", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",
-    "MoveOp", "PlacementPlan", "Planner", "ScheduledMove", "emit_schedule",
+    "MoveOp", "PhaseDecision", "PlacementPlan", "Planner", "ScheduledMove",
+    "emit_schedule",
+    "PipelineState", "PlacementPolicy", "PlanProgram", "StageProvenance",
+    "UnimemPolicy", "available_policies", "make_policy", "register_policy",
     "ObjectPhaseProfile", "PhaseProfiler",
     "RuntimeConfig", "UnimemRuntime",
     "MachineProfile", "TierSpec", "PROFILES", "PAPER_DRAM_NVM", "STT_RAM",

@@ -19,8 +19,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List
 
-from .mover import (AsyncJaxTierBackend, ChannelSimBackend, JaxTierBackend,
-                    SimTierBackend)
+from .mover import (AsyncJaxTierBackend, ChannelSimBackend, CpuPoolBackend,
+                    JaxTierBackend, SimTierBackend)
 from .tiers import MachineProfile
 
 BackendFactory = Callable[..., Any]
@@ -65,6 +65,14 @@ def _sim_factory(machine: MachineProfile, *, now_fn=None, mover: str = "slack",
     return SimTierBackend(machine, now_fn)
 
 
+def _cpu_pool_factory(machine: MachineProfile, *, pool_workers: int = 2,
+                      **_: Any):
+    """Host-side memcpy thread pool (ROADMAP: CPU copy engine) — numpy
+    leaves copied on worker threads, tier flips on landing."""
+    return CpuPoolBackend(machine, workers=pool_workers)
+
+
 register_backend("sim", _sim_factory)
 register_backend("jax", lambda machine, **_: JaxTierBackend(machine))
 register_backend("jax_async", lambda machine, **_: AsyncJaxTierBackend(machine))
+register_backend("cpu_pool", _cpu_pool_factory)

@@ -56,6 +56,9 @@ class ObjectRegistry:
         # live chunk count per parent name: O(1) collision checks even at
         # thousands of registered chunks (the planner-scale regime)
         self._chunks_of: Dict[str, int] = {}
+        #: chunk generation: bumped on every registration/removal, so plan
+        #: provenance can record which registry shape produced a decision
+        self.generation = 0
 
     def register(self, obj: DataObject) -> DataObject:
         if obj.name in self._objs:
@@ -71,6 +74,7 @@ class ObjectRegistry:
                 f"and its chunks (e.g. {example!r}) are live; registering "
                 "a new object under the parent name would orphan their "
                 "chunk state")
+        self.generation += 1
         self._objs[obj.name] = obj
         if obj.parent is not None:
             self._chunks_of[obj.parent] = \
@@ -109,6 +113,7 @@ class ObjectRegistry:
         return sum(o.size_bytes for o in self._objs.values() if o.tier == tier)
 
     def remove(self, name: str) -> None:
+        self.generation += 1
         obj = self._objs.pop(name)
         if obj.parent is not None:
             left = self._chunks_of.get(obj.parent, 0) - 1

@@ -17,8 +17,16 @@ Here the "helper thread" is whatever the backend provides:
   up to N copies in flight at once, sharing the engine's aggregate
   bandwidth; tier flips only when a copy lands (no phase may consume an
   object mid-flight).
+* :class:`CpuPoolBackend` — a host-side ``memcpy`` thread pool: each move
+  copies the object's (numpy/host) leaves on a worker thread, duck-typing
+  the same ``settle``/``complete``/``is_done``/``start_move(after=)``
+  scheduler surface as the async backends — tier flips only when the
+  worker finishes and the copy is settled or fenced.
 
-Two movers execute a :class:`~.planner.PlacementPlan` against a backend:
+Two movers execute a placement program (the
+:class:`~.policy.PlanProgram` IR — or any
+:class:`~.planner.PlacementPlan`, which the IR subsumes) against a
+backend:
 
 * :class:`ProactiveMover` — the paper's baseline: a FIFO queue serviced in
   plan order, fences only at phase boundaries.
@@ -177,6 +185,103 @@ class AsyncJaxTierBackend(JaxTierBackend):
             if all(getattr(l, "is_ready", lambda: True)()
                    for l in h.leaves):
                 self._land(h)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _PoolCopy:
+    """One in-flight copy on the CPU memcpy pool."""
+
+    obj: DataObject
+    dst: str
+    future: Any                 # concurrent.futures.Future -> copied leaves
+    treedef: Any = None
+    landed: bool = False
+
+
+class CpuPoolBackend:
+    """CPU ``memcpy`` thread pool — the host-memory analogue of the async
+    device backends (ROADMAP: multi-backend copy engines).
+
+    Each :meth:`start_move` submits the object's leaf copies to a worker
+    pool and returns immediately; the worker materializes copied leaves
+    (``np.array(leaf, copy=True)``) off the critical path.  Like the other
+    in-flight backends, the object's ``tier`` (and its relocated payload)
+    flips only when the finished copy is *landed* — by a non-blocking
+    :meth:`settle`, or by the consuming fence's :meth:`wait`/:meth:`complete`.
+    ``start_move(after=...)`` chains a fetch behind the eviction freeing
+    its space: the worker blocks on the predecessor's future, never the
+    caller.  Payload-free (logical) objects flip immediately, matching
+    :class:`JaxTierBackend`."""
+
+    def __init__(self, machine: MachineProfile, workers: int = 2):
+        import concurrent.futures
+        self.machine = machine
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max(1, workers), thread_name_prefix="unimem-memcpy")
+        self._open: List[_PoolCopy] = []
+
+    @staticmethod
+    def _copy_leaves(leaves: List[Any], predecessor: Optional[Any]) -> List[Any]:
+        import numpy as np
+        if predecessor is not None:
+            predecessor.result()        # worker waits, caller never does
+        return [np.array(l, copy=True) for l in leaves]
+
+    def start_move(self, obj: DataObject, dst: str,
+                   after: Optional[_PoolCopy] = None) -> Optional[_PoolCopy]:
+        if obj.payload is None:
+            obj.tier = dst              # logical object: nothing to copy
+            return None
+        leaves, treedef = jax.tree_util.tree_flatten(obj.payload)
+        pred = after.future if (after is not None
+                                and not after.landed) else None
+        fut = self._pool.submit(self._copy_leaves, leaves, pred)
+        h = _PoolCopy(obj, dst, fut, treedef)
+        self._open.append(h)
+        return h
+
+    def _land(self, h: _PoolCopy) -> None:
+        if not h.landed:
+            h.obj.payload = jax.tree_util.tree_unflatten(
+                h.treedef, h.future.result())
+            h.obj.tier = h.dst
+            h.landed = True
+        try:
+            self._open.remove(h)
+        except ValueError:
+            pass
+
+    def wait(self, handle: Optional[_PoolCopy]) -> float:
+        if handle is not None:
+            handle.future.result()
+            self._land(handle)
+        return 0.0                      # real backend: the fence blocked
+
+    def complete(self, handle: Optional[_PoolCopy]) -> None:
+        self.wait(handle)
+
+    def is_done(self, handle: Optional[_PoolCopy]) -> bool:
+        return (handle is None or handle.landed
+                or handle.future.done())
+
+    def settle(self, now: float = 0.0) -> None:
+        """Land every finished copy — without blocking."""
+        for h in list(self._open):      # _land prunes as it lands
+            if h.future.done():
+                self._land(h)
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __del__(self):
+        # sessions resolve backends through the registry and have no
+        # teardown hook; without this, every discarded session would leak
+        # its idle worker threads until interpreter exit
+        try:
+            self._pool.shutdown(wait=False)
+        except Exception:
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +469,17 @@ class ChannelSimBackend:
         return sum(c.done - c.start for c in self.copies)
 
 
+def _handle_orphaned(registry: ObjectRegistry, name: str, handle: Any) -> bool:
+    """True when an in-flight handle's object was retired from the
+    registry — by name, or by identity when the handle carries the
+    DataObject (a rebuild may re-register a merged chunk under the same
+    name; the handle still points at the orphan)."""
+    if name not in registry:
+        return True
+    dob = getattr(handle, "obj", None)
+    return isinstance(dob, DataObject) and dob is not registry[name]
+
+
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class MoveStats:
@@ -391,6 +507,17 @@ class ProactiveMover:
         self._inflight: Dict[str, Any] = {}     # obj -> handle
         self._queue: Deque[MoveOp] = deque()
         self.stats = MoveStats()
+
+    def load_plan(self, plan: PlacementPlan, graph: Optional[PhaseGraph] = None
+                  ) -> None:
+        """Bind a freshly-built plan: drop in-flight handles whose object
+        was retired by the rebuild (a coalesce pass removes chunk objects
+        and may re-register merged chunks under the *same names* — a
+        stale handle would alias the orphaned object's copy onto the new
+        chunk and silently swallow its first move)."""
+        for name in list(self._inflight):
+            if _handle_orphaned(self.registry, name, self._inflight[name]):
+                self._inflight.pop(name)    # orphan lands in the background
 
     def on_phase_start(self, plan: PlacementPlan, phase_index: int,
                        n_phases: int) -> float:
@@ -494,8 +621,16 @@ class SlackAwareMover:
     # ------------------------------------------------------------------ utils
     def load_plan(self, plan: PlacementPlan, graph: PhaseGraph) -> None:
         """Bind the profiled phase graph (phase-time estimates for the
-        chunk-consumption model and slack fallbacks)."""
+        chunk-consumption model and slack fallbacks), and drop in-flight
+        handles whose object was retired by the rebuild (coalesced chunk
+        names can be reused by merged chunks; a stale handle would match
+        the new chunk's first move as 'already in flight' and swallow
+        it)."""
         self.graph = graph
+        for name in list(self._inflight):
+            if _handle_orphaned(self.registry, name, self._inflight[name]):
+                self._inflight.pop(name)
+                self._finish_record(name, float("nan"), 0.0, superseded=True)
 
     def _now(self) -> float:
         now_fn = getattr(self.backend, "now_fn", None)

@@ -23,6 +23,20 @@ bisection; no histograms -> the paper's equal chunking.  ``resplit_refs``
 rewrites per-phase reference counts from the same measured histograms (per-
 chunk attribution), falling back to size fractions, and is re-run on every
 (re)plan so drifted access patterns re-attribute without re-partitioning.
+
+**Leaf alignment** (``auto_partition(..., leaf_aligned=True)``): objects
+registered from pytrees carry per-leaf byte spans; snapping chunk cuts to
+the nearest leaf boundary (:func:`snap_to_leaf_boundaries`) makes every
+chunk moveable as a set of *whole arrays* on real backends — no sub-leaf
+copies.
+
+**Coalescing** (:func:`coalesce_chunks`): bisection only ever splits, so
+when drift moves the hot window, stale fine chunks linger and the registry
+grows monotonically.  The coalescing pass re-merges *adjacent* chunks whose
+measured per-phase access densities converged and whose current tiers
+agree (never past the conservative ``capacity/chunk_divisor`` ceiling),
+capping registry growth across long drift sequences while leaving density
+edges — and therefore plan quality — intact.
 """
 
 from __future__ import annotations
@@ -123,6 +137,28 @@ def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
 
     rec(0, size_bytes, 0)
     return bounds
+
+
+def snap_to_leaf_boundaries(bounds: Sequence[int],
+                            leaf_spans: Sequence[Tuple[str, int, int]],
+                            size_bytes: int) -> List[int]:
+    """Snap each interior chunk cut to the nearest registered leaf boundary.
+
+    ``leaf_spans`` is the object's ``(path, offset, nbytes)`` list recorded
+    at pytree registration.  Cuts that collapse onto the same leaf edge (or
+    onto 0 / ``size_bytes``) are deduplicated, so an object with fewer
+    leaves than requested chunks simply degenerates to leaf-granular
+    chunks.  The trailing boundary is always ``size_bytes``."""
+    edges = sorted({off for _, off, _ in leaf_spans if 0 < off < size_bytes})
+    if not edges:
+        return [size_bytes]
+    snapped = set()
+    for b in bounds:
+        if b >= size_bytes:
+            continue
+        e = min(edges, key=lambda x: (abs(x - b), x))
+        snapped.add(e)
+    return sorted(snapped) + [size_bytes]
 
 
 # ---------------------------------------------------------------------------
@@ -234,20 +270,128 @@ def resplit_refs(graph: PhaseGraph, registry: ObjectRegistry,
 
 
 # ---------------------------------------------------------------------------
+# chunk coalescing (re-merging)
+# ---------------------------------------------------------------------------
+def coalesce_chunks(registry: ObjectRegistry, graph: PhaseGraph,
+                    profiler: Optional[PhaseProfiler],
+                    fast_capacity: int, *, chunk_divisor: int = 4,
+                    tol: float = 0.15, cold_floor: float = 0.05
+                    ) -> Dict[str, Tuple[int, int]]:
+    """Merge adjacent chunks whose measured densities converged.
+
+    For every partitioned parent with measured per-phase histograms, two
+    adjacent chunks are merge candidates when, in *every* profiled phase,
+    their per-byte access densities agree within ``tol`` (relative to the
+    larger) or both sit below ``cold_floor`` x the parent's uniform density
+    (converged-cold).  Runs of candidates additionally require agreeing
+    current tiers (a merged chunk has one residency), matching payload-free
+    chunks (physical slices cannot be re-joined without a copy), and a
+    merged size within the conservative ``capacity/chunk_divisor`` mover
+    ceiling.  Each run also re-checks convergence against its *first*
+    member, so a slowly drifting density cannot chain A~B, B~C into a
+    merged A..C with A and C far apart.
+
+    Per-phase chunk references are conserved exactly: a merged chunk's
+    count is the sum of its members' (the property tests pin this).
+    Returns ``{parent: (chunks_before, chunks_after)}`` for every parent
+    that changed."""
+    coarse = max(1, fast_capacity // chunk_divisor)
+    out: Dict[str, Tuple[int, int]] = {}
+    parents = sorted({o.parent for o in registry if o.parent is not None})
+    for parent in parents:
+        spans = chunk_spans(registry, parent)
+        if len(spans) < 2:
+            continue
+        if any(c.payload is not None for c, _, _ in spans):
+            continue        # physical slices: re-joining would copy
+        total = spans[-1][2] or 1
+        phase_bins = (profiler.object_bins(parent)
+                      if profiler is not None else {})
+        if not phase_bins:
+            continue        # no measured densities: nothing to judge by
+        # per-phase per-byte density of each chunk (mass / byte fraction;
+        # the parent's uniform density is 1.0 on this scale)
+        dens = {phi: [bin_mass(bins, lo / total, hi / total)
+                      / max((hi - lo) / total, 1e-300)
+                      for _, lo, hi in spans]
+                for phi, bins in sorted(phase_bins.items())}
+
+        def converged(i: int, j: int) -> bool:
+            for dd in dens.values():
+                a, b = dd[i], dd[j]
+                hi_ = max(a, b)
+                if hi_ <= cold_floor:
+                    continue            # both converged-cold in this phase
+                if abs(a - b) > tol * hi_:
+                    return False
+            return True
+
+        runs: List[List[int]] = []
+        cur = [0]
+        for k in range(1, len(spans)):
+            run_size = spans[k][2] - spans[cur[0]][1]
+            if (spans[k][0].tier == spans[cur[0]][0].tier
+                    and run_size <= coarse
+                    and converged(cur[-1], k) and converged(cur[0], k)):
+                cur.append(k)
+            else:
+                runs.append(cur)
+                cur = [k]
+        runs.append(cur)
+        if all(len(r) == 1 for r in runs):
+            continue
+
+        # rebuild the parent's chunking from the merged runs
+        merged_refs: List[Dict[int, float]] = []
+        specs = []
+        for run in runs:
+            members = [spans[i][0] for i in run]
+            lo, hi = spans[run[0]][1], spans[run[-1]][2]
+            specs.append((hi - lo, members[0].tier, members[0].pinned))
+            refs: Dict[int, float] = {}
+            for ph in graph:
+                s = 0.0
+                present = False
+                for m in members:
+                    if m.name in ph.refs:
+                        present = True
+                        s += ph.refs[m.name]
+                if present:
+                    refs[ph.index] = s
+            merged_refs.append(refs)
+        for c, _, _ in spans:
+            for ph in graph:
+                ph.refs.pop(c.name, None)
+            registry.remove(c.name)
+        for k, (size, tier, pinned) in enumerate(specs):
+            registry.register(DataObject(
+                name=f"{parent}#{k}", size_bytes=size, chunkable=False,
+                parent=parent, chunk_index=k, tier=tier, pinned=pinned))
+            for phi, r in merged_refs[k].items():
+                graph[phi].refs[f"{parent}#{k}"] = r
+        out[parent] = (len(spans), len(runs))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # policy
 # ---------------------------------------------------------------------------
 def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
                    fast_capacity: int, *, chunk_divisor: int = 4,
                    profiler: Optional[PhaseProfiler] = None,
                    skew_aware: bool = True,
-                   max_chunks: int = 64) -> List[str]:
+                   max_chunks: int = 64,
+                   leaf_aligned: bool = False) -> List[str]:
     """Chunk each chunkable object that cannot fit the fast tier.
 
     With measured per-object histograms (``profiler`` given and the object
     observed with per-chunk attribution) and ``skew_aware``, boundaries come
     from :func:`skew_boundaries`; otherwise the paper's conservative equal
-    split into ``capacity/chunk_divisor``-byte chunks.  Per-phase references
-    are re-attributed from the same histograms (:func:`resplit_refs`)."""
+    split into ``capacity/chunk_divisor``-byte chunks.  With
+    ``leaf_aligned`` and a pytree-registered object, cuts snap to the
+    nearest leaf boundary (chunks moveable as whole arrays).  Per-phase
+    references are re-attributed from the same histograms
+    (:func:`resplit_refs`)."""
     coarse = max(1, fast_capacity // chunk_divisor)
     partitioned = []
     for name in list(registry.names()):
@@ -260,9 +404,14 @@ def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
             bounds = skew_boundaries(
                 obj.size_bytes, phase_bins, coarse_bytes=coarse,
                 min_chunk_bytes=max(coarse // 16, 1), max_chunks=max_chunks)
-            chunks = partition_object_spans(registry, name, bounds)
         else:
-            chunks = partition_object(registry, name, coarse)
+            n_chunks = max(1, math.ceil(obj.size_bytes / coarse))
+            bounds = [min((i + 1) * coarse, obj.size_bytes)
+                      for i in range(n_chunks)]
+        if leaf_aligned and obj.leaf_spans:
+            bounds = snap_to_leaf_boundaries(bounds, obj.leaf_spans,
+                                             obj.size_bytes)
+        chunks = partition_object_spans(registry, name, bounds)
         if len(chunks) > 1:
             partitioned.append(name)
     if partitioned:

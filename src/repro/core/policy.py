@@ -1,0 +1,442 @@
+"""Placement-policy pipeline: a declarative Plan IR with pluggable stages.
+
+The paper's runtime separates *characterizing* memory access from
+*deciding* placement from *executing* moves (§3); PR 3 gave the first and
+third their own pluggable layers (``InstrumentationSource``, the copy
+backend registry).  This module does the same for the decision layer:
+planning is a **pipeline of five registered stages**, each an
+independently testable transform over (profiles, chunk registry, tier
+state):
+
+====================  =====================================================
+``attribute``         write measured phase times + per-object access counts
+                      into the phase graph (``PhaseProfiler.annotate_graph``)
+``partition``         split oversized chunkable objects along the measured
+                      access CDF and re-attribute references to chunks
+                      (``partition.auto_partition`` / ``resplit_refs``);
+                      optionally snap cuts to pytree leaf boundaries
+``coalesce``          re-merge adjacent chunks whose measured densities
+                      converged and whose tiers agree — caps registry
+                      growth across drift sequences
+                      (``partition.coalesce_chunks``)
+``solve``             best-of-two knapsack search (phase-local /
+                      cross-phase-global), scoped to the phases whose
+                      inputs changed when a standing program is available
+``schedule``          annotate every move with its copy window, duration
+                      and slack (``planner.emit_schedule``)
+====================  =====================================================
+
+The pipeline's product is a :class:`PlanProgram` — an explicit,
+JSON-serializable intermediate representation that carries the per-phase
+residency sets, the move intents with slack deadlines, the per-phase
+solve records (the standing state scoped replans re-solve against), and
+the *provenance* of every stage run (which profile epoch and chunk
+generation produced each decision).  ``PlanProgram`` subsumes
+:class:`~.planner.PlacementPlan`'s query surface, so the movers consume
+the IR directly.
+
+Policies are selected by name through a string-keyed registry mirroring
+:mod:`.backends` (``RuntimeConfig.policy = "unimem"`` →
+:func:`make_policy`); a custom policy registers a factory with
+:func:`register_policy` and may reuse, reorder, or replace any stage.
+
+**Scoped replanning** falls out of the IR: when a standing program is
+passed back into the solve stage, phases whose entry residency and input
+fingerprint still match reuse their recorded decision without re-solving
+(see :class:`~.planner.PhaseDecision`), so responding to a localized
+drift costs O(affected phases' knapsacks) instead of O(plan) — and the
+result is provably equal to a full replan, because any phase whose
+inputs changed in any way fails the fingerprint match.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+from . import partition as partition_mod
+from .data_objects import ObjectRegistry
+from .phase import PhaseGraph
+from .planner import (GlobalContrib, MoveOp, PhaseDecision, PlacementPlan,
+                      Planner, ScheduledMove, emit_schedule)
+from .profiler import PhaseProfiler
+from .tiers import MachineProfile
+
+#: canonical stage order of the unimem pipeline
+STAGE_NAMES = ("attribute", "partition", "coalesce", "solve", "schedule")
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StageProvenance:
+    """One pipeline stage run: what transformed the state, and against
+    which profile epoch / registry chunk generation it ran."""
+
+    stage: str
+    policy: str
+    profile_epoch: int
+    chunk_generation: int
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class PlanProgram(PlacementPlan):
+    """The pipeline's product: a :class:`~.planner.PlacementPlan` plus the
+    declarative bookkeeping that makes plans inspectable, serializable and
+    incrementally re-solvable.
+
+    ``phase_decisions`` (inherited) always holds the *local-search*
+    records even when the global strategy won the best-of-two — they are
+    the standing residency a scoped replan re-solves against.
+    ``provenance`` records each stage run with the profile epoch and chunk
+    generation it consumed; ``capacity_bytes`` pins the budget the solve
+    ran under (a changed budget invalidates scoped reuse wholesale)."""
+
+    policy: str = "unimem"
+    provenance: List[StageProvenance] = dataclasses.field(
+        default_factory=list)
+    profile_epoch: int = 0
+    chunk_generation: int = 0
+    capacity_bytes: int = 0
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def from_plan(cls, plan: PlacementPlan, *, policy: str,
+                  provenance: Sequence[StageProvenance],
+                  profile_epoch: int, chunk_generation: int,
+                  capacity_bytes: int,
+                  phase_decisions: Optional[Sequence[PhaseDecision]] = None,
+                  global_contribs: Optional[Sequence[GlobalContrib]] = None,
+                  graph_digest: Optional[tuple] = None) -> "PlanProgram":
+        return cls(
+            strategy=plan.strategy, residents=plan.residents,
+            moves=plan.moves,
+            predicted_iteration_time=plan.predicted_iteration_time,
+            baseline_iteration_time=plan.baseline_iteration_time,
+            schedule=plan.schedule,
+            phase_decisions=list(phase_decisions
+                                 if phase_decisions is not None
+                                 else plan.phase_decisions),
+            global_contribs=list(global_contribs
+                                 if global_contribs is not None
+                                 else plan.global_contribs),
+            graph_digest=(graph_digest if graph_digest is not None
+                          else plan.graph_digest),
+            policy=policy, provenance=list(provenance),
+            profile_epoch=profile_epoch, chunk_generation=chunk_generation,
+            capacity_bytes=capacity_bytes)
+
+    # ----------------------------------------------------------- serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(
+            policy=self.policy, strategy=self.strategy,
+            residents=[sorted(r) for r in self.residents],
+            moves=[dataclasses.asdict(m) for m in self.moves],
+            schedule=[dict(op=dataclasses.asdict(s.op), window_s=s.window_s,
+                           duration_s=s.duration_s, slack_s=s.slack_s)
+                      for s in self.schedule],
+            predicted_iteration_time=self.predicted_iteration_time,
+            baseline_iteration_time=self.baseline_iteration_time,
+            phase_decisions=[dict(
+                phase_index=d.phase_index,
+                entry_residents=sorted(d.entry_residents),
+                entry_bytes=d.entry_bytes,
+                fingerprint=d.fingerprint,    # nested tuples -> JSON lists
+                moves=[dataclasses.asdict(m) for m in d.moves],
+                exit_residents=sorted(d.exit_residents),
+                exit_bytes=d.exit_bytes,
+                benefits=d.benefits) for d in self.phase_decisions],
+            global_contribs=[dict(
+                phase_index=g.phase_index, version=list(g.version),
+                generation=g.generation, objs=list(g.objs),
+                row=[float(v) for v in g.row])
+                for g in self.global_contribs],
+            graph_digest=self.graph_digest,   # nested tuples -> JSON lists
+            provenance=[dataclasses.asdict(p) for p in self.provenance],
+            profile_epoch=self.profile_epoch,
+            chunk_generation=self.chunk_generation,
+            capacity_bytes=self.capacity_bytes)
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlanProgram":
+        def tuplify(x):
+            return tuple(tuplify(e) for e in x) if isinstance(x, list) else x
+
+        moves = [MoveOp(**m) for m in d["moves"]]
+        schedule = [ScheduledMove(MoveOp(**s["op"]), s["window_s"],
+                                  s["duration_s"], s["slack_s"])
+                    for s in d["schedule"]]
+        import numpy as np
+        decisions = [PhaseDecision(
+            phase_index=pd["phase_index"],
+            entry_residents=frozenset(pd["entry_residents"]),
+            entry_bytes=pd["entry_bytes"],
+            fingerprint=tuplify(pd["fingerprint"]),
+            moves=tuple(MoveOp(**m) for m in pd["moves"]),
+            exit_residents=frozenset(pd["exit_residents"]),
+            exit_bytes=pd["exit_bytes"],
+            benefits=pd.get("benefits")) for pd in d["phase_decisions"]]
+        contribs = [GlobalContrib(
+            phase_index=g["phase_index"], version=tuple(g["version"]),
+            generation=g["generation"], objs=tuple(g["objs"]),
+            row=np.asarray(g["row"], dtype=np.float64))
+            for g in d.get("global_contribs", [])]
+        digest = d.get("graph_digest")
+        return cls(
+            strategy=d["strategy"],
+            residents=[set(r) for r in d["residents"]],
+            moves=moves,
+            predicted_iteration_time=d["predicted_iteration_time"],
+            baseline_iteration_time=d["baseline_iteration_time"],
+            schedule=schedule, phase_decisions=decisions,
+            global_contribs=contribs,
+            graph_digest=tuplify(digest) if digest is not None else None,
+            policy=d["policy"],
+            provenance=[StageProvenance(**p) for p in d["provenance"]],
+            profile_epoch=d["profile_epoch"],
+            chunk_generation=d["chunk_generation"],
+            capacity_bytes=d["capacity_bytes"])
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlanProgram":
+        return cls.from_dict(json.loads(s))
+
+    @property
+    def reused_phases(self) -> int:
+        return sum(1 for d in self.phase_decisions if d.reused)
+
+
+# ---------------------------------------------------------------------------
+# pipeline state
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PipelineState:
+    """The mutable context threaded through the pipeline stages: the
+    characterized inputs (graph, registry, profiler), the solver, the
+    budget, the driving config (duck-typed — only the ``enable_*`` /
+    ``chunk_aware`` / ``coalesce`` / ``scoped_replan`` / ``leaf_aligned``
+    attributes are read), and the standing program a replan may re-solve
+    against."""
+
+    machine: MachineProfile
+    registry: ObjectRegistry
+    graph: PhaseGraph
+    profiler: PhaseProfiler
+    planner: Planner
+    capacity: int
+    config: Any
+    standing: Optional[PlanProgram] = None
+    provenance: List[StageProvenance] = dataclasses.field(
+        default_factory=list)
+    plan: Optional[PlacementPlan] = None        # set by the solve stage
+    local_decisions: List[PhaseDecision] = dataclasses.field(
+        default_factory=list)
+    global_contribs: List[GlobalContrib] = dataclasses.field(
+        default_factory=list)
+    graph_digest: Optional[tuple] = None
+
+    def record(self, policy: str, stage: str, detail: str = "") -> None:
+        self.provenance.append(StageProvenance(
+            stage=stage, policy=policy,
+            profile_epoch=self.profiler.epoch,
+            chunk_generation=self.registry.generation, detail=detail))
+
+    def _cfg(self, name: str, default: Any) -> Any:
+        return getattr(self.config, name, default)
+
+
+# ---------------------------------------------------------------------------
+# stages
+# ---------------------------------------------------------------------------
+def stage_attribute(state: PipelineState, policy: str = "unimem") -> None:
+    """Write measured phase times and per-object access counts into the
+    phase graph (objects faded below one access are de-referenced)."""
+    state.profiler.annotate_graph(state.graph)
+    state.record(policy, "attribute",
+                 f"{len(state.graph)} phases annotated")
+
+
+def stage_partition(state: PipelineState, policy: str = "unimem") -> None:
+    """Split oversized chunkable objects (skew-aware when histograms are
+    measured) and re-attribute per-phase references to chunks."""
+    if not state._cfg("enable_partitioning", True):
+        return
+    newly = partition_mod.auto_partition(
+        state.registry, state.graph, state.capacity,
+        profiler=state.profiler,
+        skew_aware=state._cfg("chunk_aware", True),
+        leaf_aligned=state._cfg("leaf_aligned", False))
+    if not newly:
+        # Replan with parents partitioned on an earlier build: the
+        # attribute stage just rewrote parent-name refs from the
+        # parent-keyed profiles, so re-attribute them to chunks with the
+        # freshest histograms.  (auto_partition already did this for
+        # anything it partitioned; without chunk_aware the profiler has no
+        # histograms and size fractions apply.)
+        partition_mod.resplit_refs(state.graph, state.registry,
+                                   state.profiler)
+    state.record(policy, "partition",
+                 f"split {len(newly)}" if newly else "re-attributed")
+
+
+def stage_coalesce(state: PipelineState, policy: str = "unimem") -> None:
+    """Re-merge adjacent chunks whose measured densities converged and
+    whose tiers agree (caps registry growth across drift sequences)."""
+    if not state._cfg("coalesce", True):
+        return
+    merged = partition_mod.coalesce_chunks(
+        state.registry, state.graph, state.profiler, state.capacity)
+    state.record(policy, "coalesce",
+                 ";".join(f"{p}:{b}->{a}" for p, (b, a) in sorted(
+                     merged.items())) or "no-op")
+
+
+def solve_best(planner: Planner, graph: PhaseGraph, profiler: PhaseProfiler,
+               config: Any,
+               standing: Optional[Sequence[PhaseDecision]] = None,
+               standing_global: Optional[Sequence[GlobalContrib]] = None,
+               standing_digest: Optional[tuple] = None
+               ) -> Tuple[Optional[PlacementPlan], List[PhaseDecision],
+                          List[GlobalContrib], Optional[tuple]]:
+    """The paper's best-of-two search with optional scoped solving.
+    Returns (chosen plan or None, the local-search decisions, the
+    global-search contributions, the graph digest) — the aux records are
+    kept on the program regardless of which strategy won, so the *next*
+    replan can scope."""
+    plans: List[PlacementPlan] = []
+    decisions: List[PhaseDecision] = []
+    contribs: List[GlobalContrib] = []
+    digest: Optional[tuple] = None
+    if getattr(config, "enable_local_search", True):
+        local = planner.plan_local(graph, profiler, standing=standing,
+                                   standing_digest=standing_digest)
+        decisions = local.phase_decisions
+        digest = local.graph_digest
+        plans.append(local)
+    if getattr(config, "enable_global_search", True):
+        glob = planner.plan_global(graph, profiler,
+                                   standing_global=standing_global)
+        contribs = glob.global_contribs
+        plans.append(glob)
+    if not plans:
+        return None, decisions, contribs, digest
+    return (min(plans, key=lambda p: p.predicted_iteration_time),
+            decisions, contribs, digest)
+
+
+def stage_solve(state: PipelineState, policy: str = "unimem") -> None:
+    """Best-of-two knapsack search.  With a compatible standing program
+    and ``scoped_replan``, both searches reuse every phase whose profile
+    version, registry generation, entry residency and cross-phase windows
+    still match (O(affected phases), plans equal to a full replan by
+    construction)."""
+    standing = standing_global = standing_digest = None
+    if (state.standing is not None
+            and state._cfg("scoped_replan", True)
+            and state.standing.capacity_bytes == state.planner.capacity):
+        standing = state.standing.phase_decisions or None
+        standing_global = state.standing.global_contribs or None
+        standing_digest = state.standing.graph_digest
+    (state.plan, state.local_decisions, state.global_contribs,
+     state.graph_digest) = solve_best(
+        state.planner, state.graph, state.profiler, state.config,
+        standing=standing, standing_global=standing_global,
+        standing_digest=standing_digest)
+    reused = sum(1 for d in state.local_decisions if d.reused)
+    detail = (f"{state.plan.strategy}; reused {reused}/"
+              f"{len(state.local_decisions)} phase solves"
+              if state.plan is not None else "no search enabled")
+    state.record(policy, "solve", detail)
+
+
+def stage_schedule(state: PipelineState, policy: str = "unimem") -> None:
+    """Annotate every move with its copy window, duration and slack — the
+    schedule the slack-aware mover releases most-urgent-first.  The
+    planner entry points already emit the schedule for the plans they
+    build; this stage only fills it in for plans that arrived without one
+    (a custom policy's solve stage), so a normal build does not pay for
+    the emission twice."""
+    if state.plan is None:
+        return
+    if len(state.plan.schedule) != len(state.plan.moves):
+        state.plan.schedule = emit_schedule(
+            state.plan.moves, state.graph, state.machine.copy_bw)
+    state.record(policy, "schedule",
+                 f"{len(state.plan.schedule)} moves annotated")
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """A placement policy builds a :class:`PlanProgram` from characterized
+    state (and optionally re-solves against a standing program)."""
+
+    name: str
+
+    def build(self, state: PipelineState) -> Optional[PlanProgram]: ...
+
+
+class UnimemPolicy:
+    """The paper's planner as a five-stage pipeline (see module docstring).
+    Custom policies can subclass and override ``stages``."""
+
+    name = "unimem"
+    stages: Tuple[Callable[[PipelineState, str], None], ...] = (
+        stage_attribute, stage_partition, stage_coalesce, stage_solve,
+        stage_schedule)
+
+    def build(self, state: PipelineState) -> Optional[PlanProgram]:
+        for stage in self.stages:
+            stage(state, self.name)
+        if state.plan is None:
+            return None
+        return PlanProgram.from_plan(
+            state.plan, policy=self.name, provenance=state.provenance,
+            profile_epoch=state.profiler.epoch,
+            chunk_generation=state.registry.generation,
+            capacity_bytes=state.planner.capacity,
+            phase_decisions=state.local_decisions,
+            global_contribs=state.global_contribs,
+            graph_digest=state.graph_digest)
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors core.backends)
+# ---------------------------------------------------------------------------
+PolicyFactory = Callable[..., PlacementPolicy]
+
+_REGISTRY: Dict[str, PolicyFactory] = {}
+
+
+def register_policy(name: str, factory: PolicyFactory,
+                    *, overwrite: bool = False) -> None:
+    """Register a placement-policy factory under ``name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"policy {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _REGISTRY[name] = factory
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make_policy(name: str, **options: Any) -> PlacementPolicy:
+    """Instantiate the policy registered under ``name``."""
+    factory = _REGISTRY.get(name)
+    if factory is None:
+        raise ValueError(f"unknown placement policy {name!r}; registered: "
+                         f"{available_policies()}")
+    return factory(**options)
+
+
+register_policy("unimem", lambda **_: UnimemPolicy())

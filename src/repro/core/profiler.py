@@ -38,7 +38,7 @@ without throwing the old plan away.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -96,11 +96,20 @@ class PhaseProfiler:
                  noise: float = 0.05):
         self.machine = machine
         self.noise = noise
+        #: profile epoch: bumped whenever accumulated history is decayed or
+        #: cleared — plan provenance records which epoch produced a decision
+        self.epoch = 0
         self._rng = np.random.default_rng(seed)
         # accumulated observations: (phase, obj) -> running-mean profile
         self._acc: Dict[int, Dict[str, ObjectPhaseProfile]] = {}
         # phase -> (running mean time, accumulated weight)
         self._times: Dict[int, List[float]] = {}
+        # phase -> observation counter: bumped on every mutation of that
+        # phase's accumulated state.  (epoch, phase_version) identifies a
+        # phase's profile state exactly, so the scoped replanner can prove
+        # "this phase's solve inputs did not change" without recomputing
+        # benefits (see planner.PhaseDecision).
+        self._versions: Dict[int, int] = {}
 
     # -- ingestion -----------------------------------------------------------
     def observe(self, ev: PhaseTraceEvent) -> None:
@@ -110,6 +119,8 @@ class PhaseProfiler:
         mean (weighted by prior accumulation) rather than clobbering the
         stored profile."""
         n_samples = max(ev.time * self.machine.sample_rate_hz, 1.0)
+        self._versions[ev.phase_index] = \
+            self._versions.get(ev.phase_index, 0) + 1
         prof_map = self._acc.setdefault(ev.phase_index, {})
         tm = self._times.get(ev.phase_index)
         if tm is None:
@@ -207,6 +218,11 @@ class PhaseProfiler:
         tm = self._times.get(phase_index)
         return float(tm[0]) if tm else 0.0
 
+    def phase_version(self, phase_index: int) -> Tuple[int, int]:
+        """(epoch, observation counter) — identifies this phase's
+        accumulated profile state exactly (scoped-replan reuse key)."""
+        return (self.epoch, self._versions.get(phase_index, 0))
+
     def object_bins(self, obj: str) -> Dict[int, np.ndarray]:
         """Measured per-phase access histograms for ``obj`` (phases where the
         object was observed with per-chunk attribution only)."""
@@ -236,20 +252,39 @@ class PhaseProfiler:
                 else:
                     p.refs.pop(obj, None)
 
-    def decay(self, factor: float = 0.25) -> None:
+    def decay(self, factor: float = 0.25,
+              phases: Optional[Sequence[int]] = None) -> None:
         """Down-weight accumulated history so subsequent observations dominate
         the running means (incremental replanning: reuse the old profiles as a
-        prior instead of throwing them away)."""
+        prior instead of throwing them away).
+
+        ``phases`` restricts the decay to the given phase indices — the
+        scoped drift response: only the drifted phases' histories are
+        down-weighted and re-observed, so every other phase's profile state
+        stays bitwise identical and its standing plan decision remains
+        provably reusable."""
         if not 0.0 <= factor <= 1.0:
             raise ValueError("decay factor must be in [0, 1]")
-        for prof_map in self._acc.values():
+        scope = None if phases is None else set(phases)
+        if scope is None:
+            self.epoch += 1
+        for phase_index, prof_map in self._acc.items():
+            if scope is not None:
+                if phase_index not in scope:
+                    continue
+                self._versions[phase_index] = \
+                    self._versions.get(phase_index, 0) + 1
             for p in prof_map.values():
                 p.weight *= factor
                 if p.bin_counts is not None:
                     p.bin_counts = p.bin_counts * factor
-        for tm in self._times.values():
+        for phase_index, tm in self._times.items():
+            if scope is not None and phase_index not in scope:
+                continue
             tm[1] *= factor
 
     def clear(self) -> None:
+        self.epoch += 1
+        self._versions.clear()
         self._acc.clear()
         self._times.clear()

@@ -45,7 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from . import backends as backends_mod
 from . import initial as initial_mod
-from . import partition as partition_mod
+from . import policy as policy_mod
 from .data_objects import DataObject, ObjectRegistry
 from .instrumentation import InstrumentationSource, PhaseSample
 from .monitor import VariationMonitor
@@ -88,6 +88,21 @@ class RuntimeConfig:
     # How much accumulated profile weight survives a drift event (0 = start
     # from scratch, 1 = new observations barely move the running means).
     replan_decay: float = 0.25
+    # Placement policy, resolved through the string-keyed policy registry
+    # (:mod:`repro.core.policy`): the pipeline of attribute -> partition ->
+    # coalesce -> solve -> schedule stages that turns profiles into a
+    # PlanProgram.  "unimem" is the paper's planner.
+    policy: str = "unimem"
+    # Re-merge adjacent chunks whose measured densities converged and whose
+    # tiers agree (caps chunk-registry growth across drift sequences).
+    coalesce: bool = True
+    # Scoped replanning: with a standing program, re-solve only the phases
+    # whose solve inputs changed (O(affected phases), provably equal to a
+    # full replan).  False always re-solves every phase.
+    scoped_replan: bool = True
+    # Snap partition cuts to registered pytree leaf boundaries so chunks
+    # are moveable as whole arrays on real backends (no sub-leaf copies).
+    leaf_aligned: bool = False
 
 
 @dataclasses.dataclass
@@ -124,6 +139,7 @@ class Session:
         self.profiler = PhaseProfiler(machine, seed=self.config.seed)
         self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
         self.planner = Planner(machine, self.registry, self.cf, self.capacity)
+        self.policy = policy_mod.make_policy(self.config.policy)
         self.mover: Optional[ProactiveMover] = None
         self.plan: Optional[PlacementPlan] = None
         self.graph: Optional[PhaseGraph] = None
@@ -139,6 +155,9 @@ class Session:
         self._profiled_iters = 0
         self._baseline_pending = False
         self._plan_n_phases = 0     # phase count the live plan was built on
+        # Scoped drift response: the phase indices being re-profiled (None
+        # = every phase).  Set by _reprofile, consumed until the rebuild.
+        self._drift_scope: Optional[set] = None
         self._static_refs: Dict[str, float] = {}
         self.n_replans = 0              # drift-triggered replan cycles
         self.n_incremental_replans = 0  # ... served without dropping the plan
@@ -227,6 +246,7 @@ class Session:
         self.plan = None
         self._baseline_pending = False
         self._plan_n_phases = 0
+        self._drift_scope = None
         self._events_this_iter = []
         self._iter_open = False
         self._open_phase = None
@@ -385,7 +405,20 @@ class Session:
                              access_bins=access_bins)
         self._events_this_iter.append(ev)
         if self._profiling:
-            self.profiler.observe(ev)
+            # Scoped drift response: only the drifted phases re-observe, so
+            # every other phase's profile state stays bitwise identical and
+            # its standing plan decision remains provably reusable.  A
+            # phase whose access *set* visibly changed joins the scope even
+            # if its time held (instrumentation is collected every
+            # iteration, so the check is free).
+            if (self._drift_scope is not None
+                    and index not in self._drift_scope
+                    and self._access_set_drifted(ev)):
+                self._drift_scope.add(index)
+                self.profiler.decay(self.config.replan_decay,
+                                    phases=[index])
+            if self._drift_scope is None or index in self._drift_scope:
+                self.profiler.observe(ev)
         elif self._baseline_pending:
             # First iteration after (re)planning: phase times now reflect the
             # enacted placement — record them as the monitor baseline (the
@@ -413,32 +446,26 @@ class Session:
             self._baseline_pending = False
 
     # ------------------------------------------------------------- internals
+    def _pipeline_state(self) -> "policy_mod.PipelineState":
+        """Characterized inputs for the placement-policy pipeline.  The
+        standing program (when a plan is live and incremental replanning is
+        on) lets the solve stage re-solve only the phases whose inputs
+        changed."""
+        standing = (self.plan
+                    if (self.config.incremental_replan
+                        and isinstance(self.plan, policy_mod.PlanProgram))
+                    else None)
+        return policy_mod.PipelineState(
+            machine=self.machine, registry=self.registry, graph=self.graph,
+            profiler=self.profiler, planner=self.planner,
+            capacity=self.capacity, config=self.config, standing=standing)
+
     def _build_plan(self) -> None:
         assert self.graph is not None
-        self.profiler.annotate_graph(self.graph)
-        if self.config.enable_partitioning:
-            newly = partition_mod.auto_partition(
-                self.registry, self.graph, self.capacity,
-                profiler=self.profiler,
-                skew_aware=self.config.chunk_aware)
-            if not newly:
-                # Replan with parents partitioned on an earlier build:
-                # annotate_graph just rewrote parent-name refs from the
-                # parent-keyed profiles, so re-attribute them to chunks with
-                # the freshest histograms.  (auto_partition already did this
-                # for anything it partitioned; without chunk_aware the
-                # profiler has no histograms and size fractions apply.)
-                partition_mod.resplit_refs(self.graph, self.registry,
-                                           self.profiler)
-        plans = []
-        if self.config.enable_local_search:
-            plans.append(self.planner.plan_local(self.graph, self.profiler))
-        if self.config.enable_global_search:
-            plans.append(self.planner.plan_global(self.graph, self.profiler))
-        if not plans:
-            self.plan = None
+        self.plan = self.policy.build(self._pipeline_state())
+        self._drift_scope = None
+        if self.plan is None:
             return
-        self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
         self._plan_n_phases = len(self._phase_names)
         self._baseline_pending = True
         self.monitor.consume_events()
@@ -453,14 +480,31 @@ class Session:
         plan, decay the profile history so fresh observations dominate, and
         rebuild from the live tier state when enough iterations re-profiled —
         the plan is never dropped, so no iteration runs unplaced.  Legacy:
-        the paper's full reset."""
+        the paper's full reset.
+
+        With ``scoped_replan`` and a standing program, the re-profiling
+        itself is *scoped to the drifted phases*: only their histories are
+        decayed and re-observed, every other phase's profile state stays
+        bitwise identical, and the rebuild re-solves O(drifted phases)
+        knapsacks instead of O(plan).  A phase that drifted without
+        tripping the monitor is caught on the next cycle (its post-replan
+        baseline re-arms the monitor)."""
         self.n_replans += 1
         if self.config.incremental_replan and self.plan is not None:
             self.n_incremental_replans += 1
-            self.profiler.decay(self.config.replan_decay)
+            drifted = set(self.monitor.drifted_phases())
+            scope = None
+            if (self.config.scoped_replan and drifted
+                    and isinstance(self.plan, policy_mod.PlanProgram)):
+                scope = drifted
+            self._drift_scope = scope
+            self.profiler.decay(
+                self.config.replan_decay,
+                phases=sorted(scope) if scope is not None else None)
             self._profiling = True
             self._profiled_iters = 0
         else:
+            self._drift_scope = None
             self.profiler.clear()
             self._profiling = True
             self._profiled_iters = 0
@@ -471,7 +515,32 @@ class Session:
         # not the profiler — replay them so the re-profiling window covers
         # the full iteration, not just the phases after the drift.
         for ev in self._events_this_iter:
-            self.profiler.observe(ev)
+            if (self._drift_scope is not None
+                    and ev.phase_index not in self._drift_scope
+                    and self._access_set_drifted(ev)):
+                self._drift_scope.add(ev.phase_index)
+                self.profiler.decay(self.config.replan_decay,
+                                    phases=[ev.phase_index])
+            if self._drift_scope is None or ev.phase_index in self._drift_scope:
+                self.profiler.observe(ev)
+
+    def _access_set_drifted(self, ev: PhaseTraceEvent) -> bool:
+        """Access-mix drift the time-based monitor cannot see: an object
+        carrying a material share of this execution's accesses has no
+        profile entry for the phase (it appeared), or a profiled hot
+        object received none (it vanished)."""
+        total = sum(ev.accesses.values())
+        profs = self.profiler.profiles_for_phase(ev.phase_index)
+        if total > 0.0:
+            for obj, acc in ev.accesses.items():
+                if acc > 0.05 * total and obj not in profs:
+                    return True
+        ptotal = sum(p.data_access for p in profs.values())
+        for obj, p in profs.items():
+            if (p.data_access > 0.05 * max(ptotal, 1.0)
+                    and ev.accesses.get(obj, 0.0) <= 0.0):
+                return True
+        return False
 
     # ------------------------------------------------------------- reporting
     def phase_names(self) -> List[str]:

@@ -519,10 +519,57 @@ def paged_attention(scale: float = 1.0, n_pages: int = 28,
                        chunkable={"kv_arena": True})
 
 
+def fsdp_grad_buckets(scale: float = 1.0, n_layers: int = 6) -> SimWorkload:
+    """FSDP-style gradient-bucket churn (the ROADMAP's training trace).
+
+    Fully-sharded training materializes per-layer state transiently: the
+    forward pass all-gathers each layer's weights just in time; the
+    backward pass revisits them in reverse and fills a per-layer *gradient
+    bucket* that is reduce-scattered right after the layer's backward and
+    then goes cold until the next iteration.  Optimizer shards are touched
+    only in the trailing update phase.  The per-phase hot set is small
+    (one layer's weights + one bucket) but rotates through every layer
+    each iteration while the total state is ~3x the fast tier — the
+    highest-churn scenario in the matrix: every phase boundary retires one
+    bucket and prefetches the next layer's state, so the mover's
+    eviction-off-the-fence and overlap quality dominate steady-state time.
+    Weight gathers are bandwidth-bound; bucket reduction mixes in the
+    irregular index traffic of the sharded reduce; optimizer math streams
+    both its shard and the weights."""
+    s = scale
+    wb = int(44 * MB * s)           # one layer's gathered weights
+    gb = int(44 * MB * s)           # its gradient bucket
+    ob = int(26 * MB * s)           # its optimizer shard
+    objects: Dict[str, int] = {"act_stash": int(48 * MB * s)}
+    for i in range(n_layers):
+        objects[f"w{i}"] = wb
+        objects[f"g{i}"] = gb
+        objects[f"opt{i}"] = ob
+    phases: List[SimPhaseSpec] = []
+    for i in range(n_layers):
+        phases.append(SimPhaseSpec(f"fwd{i}", 0.010, {
+            f"w{i}": _acc(wb, 2.0, 1.0),
+            "act_stash": _acc(objects["act_stash"], 0.5, 1.0)}))
+    for i in reversed(range(n_layers)):
+        phases.append(SimPhaseSpec(f"bwd{i}", 0.014, {
+            f"w{i}": _acc(wb, 2.0, 1.0),
+            f"g{i}": _acc(gb, 3.0, 0.8),
+            "act_stash": _acc(objects["act_stash"], 0.5, 1.0)}))
+        phases.append(SimPhaseSpec(f"rs{i}", 0.004, {
+            f"g{i}": _acc(gb, 2.0, 0.6)}))
+    opt_touches: Dict[str, SimObjectAccess] = {}
+    for i in range(n_layers):
+        opt_touches[f"opt{i}"] = _acc(ob, 2.0, 1.0)
+        opt_touches[f"w{i}"] = _acc(wb, 1.0, 1.0)
+    phases.append(SimPhaseSpec("opt_update", 0.012, opt_touches))
+    return SimWorkload("fsdp_buckets", phases, objects)
+
+
 SCENARIO_WORKLOADS = {
     "kv_serving": kv_serving,
     "moe_churn": moe_expert_churn,
     "graph_chase": graph_chase,
+    "fsdp_buckets": fsdp_grad_buckets,
 }
 
 # Skewed variants: the hot-chunk placement pipeline's target workloads.

@@ -21,8 +21,8 @@ except ImportError:                      # no hypothesis: seeded shim
     from _propcheck import st, given, settings
 
 from repro.core import (PAPER_DRAM_NVM, AsyncJaxTierBackend,
-                        ChannelSimBackend, JaxTierBackend, ManualSource,
-                        RuntimeConfig, Session, SimTierBackend,
+                        ChannelSimBackend, CpuPoolBackend, JaxTierBackend,
+                        ManualSource, RuntimeConfig, Session, SimTierBackend,
                         UnimemRuntime, available_backends, calibrate,
                         make_backend, register_backend)
 from repro.core.data_objects import ObjectRegistry
@@ -368,7 +368,7 @@ def test_start_loop_reentry_resets_plan_and_baselines():
 # ---------------------------------------------------------------------------
 def test_backend_registry_contents():
     names = available_backends()
-    for expected in ("sim", "jax", "jax_async"):
+    for expected in ("sim", "jax", "jax_async", "cpu_pool"):
         assert expected in names
 
 
@@ -491,6 +491,93 @@ def test_async_jax_backend_settle_lands_ready_copies():
         leaf.block_until_ready()
     b.settle(0.0)
     assert obj.tier == "fast" and h.landed
+
+
+def test_cpu_pool_backend_registered_and_configurable():
+    b = make_backend("cpu_pool", MACHINE, pool_workers=3)
+    assert isinstance(b, CpuPoolBackend)
+    rt = Session(MACHINE, RuntimeConfig(backend="cpu_pool"))
+    assert isinstance(rt.backend, CpuPoolBackend)
+    b.shutdown()
+    rt.backend.shutdown()
+
+
+def test_cpu_pool_backend_moves_and_lands_on_settle():
+    """The memcpy pool copies numpy leaves on workers; the tier (and the
+    relocated payload) flips only when the finished copy is settled or
+    fenced — the same in-flight semantics as the async jax backend."""
+    import numpy as np
+    reg = ObjectRegistry()
+    b = CpuPoolBackend(MACHINE, workers=2)
+    try:
+        src = np.arange(4096, dtype=np.float32)
+        obj = reg.alloc("x", src.nbytes, payload={"w": src})
+        h = b.start_move(obj, "fast")
+        assert h is not None
+        h.future.result()               # copy finished on the worker...
+        assert obj.tier == "slow"       # ...but not yet landed
+        b.settle(0.0)
+        assert obj.tier == "fast" and h.landed
+        moved = obj.payload["w"]
+        assert moved is not src and np.array_equal(moved, src)
+        # wait() fences and lands; logical objects flip immediately
+        o2 = reg.alloc("y", 1024, payload={"w": np.ones(256, np.float32)})
+        assert b.wait(b.start_move(o2, "fast")) == 0.0
+        assert o2.tier == "fast"
+        o3 = reg.alloc("z", 1024)
+        assert b.start_move(o3, "fast") is None and o3.tier == "fast"
+        assert b._open == []            # landed handles pruned
+    finally:
+        b.shutdown()
+
+
+def test_cpu_pool_backend_chains_after_eviction():
+    """start_move(after=) orders a fetch behind the eviction freeing its
+    space: the fetch's worker blocks on the eviction's copy, the caller
+    never does, and is_done stays a non-blocking probe."""
+    import numpy as np
+    reg = ObjectRegistry()
+    b = CpuPoolBackend(MACHINE, workers=1)      # one worker: strict order
+    try:
+        victim = reg.alloc("victim", 4096,
+                           payload={"w": np.zeros(1024, np.float32)},
+                           tier="fast")
+        incoming = reg.alloc("incoming", 4096,
+                             payload={"w": np.ones(1024, np.float32)})
+        ev = b.start_move(victim, "slow")
+        h = b.start_move(incoming, "fast", after=ev)
+        assert b.is_done(None)
+        b.complete(h)                   # fencing the fetch lands it
+        assert incoming.tier == "fast"
+        assert ev.future.done()         # predecessor necessarily finished
+        b.settle(0.0)
+        assert victim.tier == "slow"
+    finally:
+        b.shutdown()
+
+
+def test_cpu_pool_backend_through_runtime_end_to_end():
+    """A session on backend='cpu_pool' plans and migrates numpy-payload
+    objects through the slack mover's settle/fence path."""
+    import numpy as np
+    rt = UnimemRuntime(MACHINE,
+                       RuntimeConfig(fast_capacity_bytes=3 * MB // 2,
+                                     backend="cpu_pool",
+                                     enable_partitioning=False), cf=CF)
+    hot = rt.register("hot", size_bytes=MB,
+                      payload={"w": np.ones(MB // 4, np.float32)})
+    cold = rt.register("cold", size_bytes=MB,
+                       payload={"w": np.ones(MB // 4, np.float32)})
+    for _ in range(4):
+        with rt.iteration():
+            with rt.phase("compute", accesses={"hot": 1e6}, elapsed=0.05):
+                pass
+            with rt.phase("update", accesses={"cold": 1e3}, elapsed=0.01):
+                pass
+    assert rt.plan is not None
+    assert hot.tier == "fast"
+    assert cold.tier == "slow"
+    rt.backend.shutdown()
 
 
 def test_async_backend_through_runtime_end_to_end():

@@ -1,0 +1,599 @@
+"""Placement-policy pipeline: registry, PlanProgram IR round-trip,
+per-stage properties (coalesce conservation, leaf alignment), scoped
+replanning (plan equality + reuse), and the old-vs-new parity goldens."""
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # no hypothesis: seeded shim
+    from _propcheck import st, given, settings
+
+from repro.core import (CalibrationConstants, PAPER_DRAM_NVM, PhaseProfiler,
+                        Planner, PlanProgram, RuntimeConfig, UnimemPolicy,
+                        UnimemRuntime, available_policies, build_phase_graph,
+                        calibrate, make_policy, register_policy)
+from repro.core import partition as partition_mod
+from repro.core.data_objects import DataObject, ObjectRegistry
+from repro.core.partition import (auto_partition, chunk_spans,
+                                  coalesce_chunks, resplit_refs,
+                                  snap_to_leaf_boundaries)
+from repro.core.phase import PhaseTraceEvent
+from repro.core.planner import _WindowIndex, graph_digest
+from repro.core.policy import STAGE_NAMES, solve_best
+from repro.sim import (SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS,
+                       SimulationEngine, power_law_density)
+from repro.sim.engine import SimPhaseSpec, SimSource
+from repro.sim.workloads import SimWorkload
+
+MB = 1024 ** 2
+M = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+CF = calibrate(M)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+def run_scenario(wl, *, config=None, iters=8, runtime_cls=UnimemRuntime):
+    rt = runtime_cls(
+        M, config or RuntimeConfig(fast_capacity_bytes=256 * MB,
+                                   mover="slack", drift_threshold=10.0),
+        cf=CF)
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    res = SimulationEngine(M, wl, runtime=rt).run(iters)
+    return res, rt
+
+
+def build_chunk_fixture(n_objs, n_phases=12, seed=0):
+    """The planner-latency fixture: N chunks over 10 partitioned parents
+    with parent-level profiles (the chunk-attribution hot path)."""
+    rng = random.Random(seed)
+    reg = ObjectRegistry()
+    per = n_objs // 10
+    for p in range(10):
+        for k in range(per):
+            reg.register(DataObject(
+                name=f"par{p}#{k}", size_bytes=rng.randint(1, 4) * MB,
+                parent=f"par{p}", chunk_index=k))
+    refs, times = [], []
+    for _ in range(n_phases):
+        r = {f"par{p}": rng.uniform(1e5, 1e7) for p in range(10)
+             if rng.random() < 0.7}
+        refs.append(r)
+        times.append(rng.uniform(0.01, 0.2))
+    graph = build_phase_graph(
+        [(f"ph{i}", rr) for i, rr in enumerate(refs)], times=times)
+    prof = PhaseProfiler(M, seed=seed)
+    for i, rr in enumerate(refs):
+        prof.observe(PhaseTraceEvent(i, times[i], dict(rr)))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg)
+    return reg, graph, prof, refs, times
+
+
+def plans_equal(a, b) -> bool:
+    return (a.moves == b.moves and a.residents == b.residents
+            and a.predicted_iteration_time == b.predicted_iteration_time
+            and a.strategy == b.strategy)
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+def test_policy_registry_contents():
+    assert "unimem" in available_policies()
+    assert isinstance(make_policy("unimem"), UnimemPolicy)
+
+
+def test_unknown_policy_raises_with_listing():
+    with pytest.raises(ValueError, match="unimem"):
+        make_policy("lru")
+
+
+def test_policy_reregistration_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("unimem", lambda **_: UnimemPolicy())
+
+
+def test_custom_policy_through_config():
+    """A registered custom policy is selected by RuntimeConfig.policy and
+    drives the session end to end (here: the pipeline minus coalescing,
+    with a reordered stage tuple)."""
+    from repro.core.policy import (stage_attribute, stage_partition,
+                                   stage_schedule, stage_solve)
+
+    class NoCoalescePolicy(UnimemPolicy):
+        name = "test_no_coalesce"
+        stages = (stage_attribute, stage_partition, stage_solve,
+                  stage_schedule)
+
+    register_policy("test_no_coalesce", lambda **_: NoCoalescePolicy(),
+                    overwrite=True)
+    wl = SCENARIO_WORKLOADS["kv_serving"]()
+    res, rt = run_scenario(wl, config=RuntimeConfig(
+        fast_capacity_bytes=256 * MB, mover="slack", drift_threshold=10.0,
+        policy="test_no_coalesce"))
+    assert rt.plan is not None
+    assert rt.plan.policy == "test_no_coalesce"
+    assert [p.stage for p in rt.plan.provenance] == [
+        "attribute", "partition", "solve", "schedule"]
+
+
+def test_unimem_pipeline_records_five_stages():
+    wl = SKEWED_SCENARIO_WORKLOADS["kv_serving_skew"]()
+    _, rt = run_scenario(wl)
+    assert isinstance(rt.plan, PlanProgram)
+    assert tuple(p.stage for p in rt.plan.provenance) == STAGE_NAMES
+    # provenance pins what produced the decisions
+    assert rt.plan.profile_epoch == rt.profiler.epoch
+    assert rt.plan.chunk_generation == rt.registry.generation
+    assert rt.plan.capacity_bytes == 256 * MB
+
+
+# ---------------------------------------------------------------------------
+# PlanProgram IR: serialization round-trip
+# ---------------------------------------------------------------------------
+def test_plan_program_json_round_trip():
+    wl = SKEWED_SCENARIO_WORKLOADS["kv_serving_skew"]()
+    _, rt = run_scenario(wl)
+    prog = rt.plan
+    back = PlanProgram.from_json(prog.to_json())
+    assert back.strategy == prog.strategy
+    assert back.moves == prog.moves
+    assert back.residents == prog.residents
+    assert back.schedule == prog.schedule
+    assert back.predicted_iteration_time == prog.predicted_iteration_time
+    assert back.policy == prog.policy
+    assert back.provenance == prog.provenance
+    assert back.capacity_bytes == prog.capacity_bytes
+    assert back.graph_digest == prog.graph_digest
+    assert len(back.phase_decisions) == len(prog.phase_decisions)
+    for a, b in zip(back.phase_decisions, prog.phase_decisions):
+        assert a == b                     # entry/exit/fingerprint/moves
+        assert a.benefits == b.benefits
+    assert len(back.global_contribs) == len(prog.global_contribs)
+    for a, b in zip(back.global_contribs, prog.global_contribs):
+        assert a.version == b.version and a.objs == b.objs
+        assert np.array_equal(a.row, b.row)
+
+
+def test_deserialized_program_drives_scoped_replan():
+    """The IR is the standing state: a program that went through JSON can
+    be re-solved against with full reuse and a bit-identical result."""
+    reg, graph, prof, _, _ = build_chunk_fixture(200)
+    planner = Planner(M, reg, CalibrationConstants(), 256 * MB)
+    local = planner.plan_local(graph, prof)
+    glob = planner.plan_global(graph, prof)
+    prog = PlanProgram.from_plan(
+        local, policy="unimem", provenance=[], profile_epoch=prof.epoch,
+        chunk_generation=reg.generation, capacity_bytes=256 * MB,
+        phase_decisions=local.phase_decisions,
+        global_contribs=glob.global_contribs,
+        graph_digest=local.graph_digest)
+    back = PlanProgram.from_json(prog.to_json())
+    replan = planner.plan_local(graph, prof,
+                                standing=back.phase_decisions,
+                                standing_digest=back.graph_digest)
+    assert plans_equal(replan, local)
+    assert all(d.reused for d in replan.phase_decisions)
+
+
+# ---------------------------------------------------------------------------
+# coalesce stage: conservation + acceptance
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 120))
+@settings(max_examples=20, deadline=None)
+def test_coalesce_conserves_refs_and_bytes(seed):
+    """Property: coalescing preserves the parent's total size, keeps every
+    merged chunk within the coarse ceiling, never increases the chunk
+    count, and conserves per-phase attributed references exactly."""
+    rng = random.Random(seed)
+    reg = ObjectRegistry()
+    size = rng.randint(280, 600) * MB       # always exceeds the 256 MB tier
+    reg.alloc("big", size, chunkable=True)
+    n_phases = rng.randint(1, 4)
+    graph = build_phase_graph(
+        [(f"p{i}", {"big": rng.uniform(1e5, 1e7)}) for i in range(n_phases)],
+        times=[0.1] * n_phases)
+    prof = PhaseProfiler(M, seed=seed)
+    for i in range(n_phases):
+        # piecewise density: some adjacent-equal regions -> mergeable runs
+        w = []
+        while len(w) < 64:
+            w.extend([rng.choice([0.0, 0.1, 1.0, 4.0])] * rng.randint(2, 10))
+        prof.observe(PhaseTraceEvent(i, 0.1, {"big": graph[i].refs["big"]},
+                                     access_bins={"big": w[:64]}))
+    prof.annotate_graph(graph)
+    cap = 256 * MB
+    auto_partition(reg, graph, cap, profiler=prof)
+    before = chunk_spans(reg, "big")
+    refs_before = [sum(graph[i].refs.get(c.name, 0.0) for c, _, _ in before)
+                   for i in range(n_phases)]
+    merged = coalesce_chunks(reg, graph, prof, cap)
+    after = chunk_spans(reg, "big")
+    assert sum(c.size_bytes for c, _, _ in after) == size
+    assert len(after) <= len(before)
+    assert max(c.size_bytes for c, _, _ in after) <= cap // 4
+    for i in range(n_phases):
+        got = sum(graph[i].refs.get(c.name, 0.0) for c, _, _ in after)
+        assert got == pytest.approx(refs_before[i], rel=1e-9)
+    if merged:
+        b, a = merged["big"]
+        assert (b, a) == (len(before), len(after)) and a < b
+
+
+def test_coalesce_requires_tier_agreement():
+    """Chunks in different tiers never merge (a merged chunk has exactly
+    one residency)."""
+    reg = ObjectRegistry()
+    graph = build_phase_graph([("p0", {})], times=[0.1])
+    prof = PhaseProfiler(M, seed=0)
+    prof.observe(PhaseTraceEvent(0, 0.1, {"big": 1e6},
+                                 access_bins={"big": [1.0] * 8}))
+    for k in range(4):
+        reg.register(DataObject(name=f"big#{k}", size_bytes=10 * MB,
+                                parent="big", chunk_index=k,
+                                tier="fast" if k < 2 else "slow"))
+    merged = coalesce_chunks(reg, graph, prof, 256 * MB)
+    spans = chunk_spans(reg, "big")
+    assert len(spans) == 2                      # fast pair + slow pair
+    assert [c.tier for c, _, _ in spans] == ["fast", "slow"]
+    assert merged == {"big": (4, 2)}
+
+
+def test_coalesce_keeps_density_edges():
+    """Hot and cold regions with distinct measured densities stay
+    separate chunks."""
+    reg = ObjectRegistry()
+    graph = build_phase_graph([("p0", {})], times=[0.1])
+    prof = PhaseProfiler(M, seed=0)
+    bins = [4.0] * 4 + [0.0] * 4
+    prof.observe(PhaseTraceEvent(0, 0.1, {"big": 1e6},
+                                 access_bins={"big": bins}))
+    for k in range(8):
+        reg.register(DataObject(name=f"big#{k}", size_bytes=8 * MB,
+                                parent="big", chunk_index=k))
+    coalesce_chunks(reg, graph, prof, 256 * MB)
+    spans = chunk_spans(reg, "big")
+    assert len(spans) == 2
+    assert spans[0][0].size_bytes == 32 * MB    # hot head merged
+    assert spans[1][0].size_bytes == 32 * MB    # cold tail merged
+
+
+def test_coalesce_caps_kv_serving_skew_chunks():
+    """Acceptance: coalescing reduces the steady-state chunk count on
+    kv_serving_skew (from 64) with no steady-state slack regression
+    beyond 5%."""
+    wl = SKEWED_SCENARIO_WORKLOADS["kv_serving_skew"]()
+    cfg = lambda co: RuntimeConfig(fast_capacity_bytes=256 * MB,
+                                   mover="slack", drift_threshold=10.0,
+                                   coalesce=co)
+    off, rt_off = run_scenario(wl, config=cfg(False), iters=10)
+    wl = SKEWED_SCENARIO_WORKLOADS["kv_serving_skew"]()
+    on, rt_on = run_scenario(wl, config=cfg(True), iters=10)
+    n_off = sum(1 for o in rt_off.registry if o.parent is not None)
+    n_on = sum(1 for o in rt_on.registry if o.parent is not None)
+    assert n_off == 64                  # the ROADMAP's lingering registry
+    assert n_on < n_off
+    assert (on.steady_iteration_time
+            <= off.steady_iteration_time * 1.05)
+
+
+# ---------------------------------------------------------------------------
+# leaf-aligned partitioning
+# ---------------------------------------------------------------------------
+def test_snap_to_leaf_boundaries_unit():
+    spans = [("a", 0, 100), ("b", 100, 60), ("c", 160, 140)]
+    size = 300
+    snapped = snap_to_leaf_boundaries([90, 170, 300], spans, size)
+    assert snapped == [100, 160, 300]
+    # duplicate snaps collapse; trailing boundary always the size
+    assert snap_to_leaf_boundaries([95, 105, 300], spans, size) == [100, 300]
+    # no interior leaf edges: degenerate single chunk
+    assert snap_to_leaf_boundaries([50, 100], [("a", 0, 100)], 100) == [100]
+
+
+def test_leaf_aligned_partition_cuts_on_leaf_edges():
+    """With RuntimeConfig.leaf_aligned, every chunk boundary of a
+    pytree-registered object lands on a leaf boundary, so chunks are
+    moveable as whole arrays."""
+    import jax
+
+    rt = UnimemRuntime(
+        M, RuntimeConfig(fast_capacity_bytes=64 * MB, mover="fifo",
+                         leaf_aligned=True, enable_initial_placement=False),
+        cf=CF)
+    n_leaves = 10
+    tree = {f"l{i:02d}": jax.ShapeDtypeStruct((24, 1024, 1024), "float32")
+            for i in range(n_leaves)}    # 96 MB per leaf, 960 MB total
+    obj = rt.register("big", tree, chunkable=True)
+    leaf_edges = {off for _, off, _ in obj.leaf_spans} | {obj.size_bytes}
+    for _ in range(2):
+        with rt.iteration():
+            with rt.phase("p0", accesses={"big": 1e7}, elapsed=0.1):
+                pass
+    spans = chunk_spans(rt.registry, "big")
+    assert len(spans) >= 2
+    for _, lo, hi in spans:
+        assert lo in leaf_edges | {0}
+        assert hi in leaf_edges
+    assert sum(hi - lo for _, lo, hi in spans) == obj.size_bytes
+
+
+# ---------------------------------------------------------------------------
+# scoped replanning: equality properties
+# ---------------------------------------------------------------------------
+def test_window_index_matches_graph_trigger_points():
+    for seed in range(30):
+        _, graph, _, refs, _ = build_chunk_fixture(100, seed=seed)
+        widx = _WindowIndex(graph)
+        for ph in graph:
+            for o in ph.refs:
+                assert widx.trigger(o, ph.index) == \
+                    graph.trigger_point(o, ph.index)
+
+
+@given(seed=st.integers(0, 150), n_drift=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_scoped_replan_equals_full_replan(seed, n_drift):
+    """Property: after perturbing any subset of phases' profiles, a
+    scoped replan against the standing decisions produces exactly the
+    plan a full replan produces."""
+    rng = random.Random(seed)
+    n_phases = rng.randint(2, 8)
+    reg, graph, prof, refs, times = build_chunk_fixture(
+        rng.choice([100, 200]), n_phases=n_phases, seed=seed)
+    planner = Planner(M, reg, CalibrationConstants(), 256 * MB)
+    local = planner.plan_local(graph, prof)
+    glob = planner.plan_global(graph, prof)
+
+    for p in rng.sample(range(n_phases), min(n_drift, n_phases)):
+        prof.decay(0.25, phases=[p])
+        factor = rng.uniform(0.3, 3.0)
+        t = times[p] * (1.0 if rng.random() < 0.5 else rng.uniform(0.5, 2.0))
+        prof.observe(PhaseTraceEvent(
+            p, t, {k: v * factor for k, v in refs[p].items()}))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg)
+
+    full = planner.plan(graph, prof)
+    scoped = planner.plan(graph, prof,
+                          standing=local.phase_decisions,
+                          standing_global=glob.global_contribs,
+                          standing_digest=local.graph_digest)
+    assert plans_equal(full, scoped)
+
+
+def test_scoped_replan_reuses_unaffected_phases():
+    """Single-phase drift with unchanged phase time: every other phase's
+    decision is reused verbatim (the fast path), and the plan still
+    equals a full replan."""
+    reg, graph, prof, refs, times = build_chunk_fixture(500, n_phases=12)
+    planner = Planner(M, reg, CalibrationConstants(), 256 * MB)
+    local = planner.plan_local(graph, prof)
+    glob = planner.plan_global(graph, prof)
+    drift = 11
+    prof.decay(0.25, phases=[drift])
+    prof.observe(PhaseTraceEvent(
+        drift, times[drift], {k: v * 1.35 for k, v in refs[drift].items()}))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg)
+
+    full = planner.plan_local(graph, prof)
+    scoped = planner.plan_local(graph, prof,
+                                standing=local.phase_decisions,
+                                standing_digest=local.graph_digest)
+    assert plans_equal(full, scoped)
+    reused = [d.reused for d in scoped.phase_decisions]
+    assert sum(reused) == 11 and not reused[drift]
+
+
+def _drift_variant(wl, phase_idx, factor=3.0):
+    """One phase's access counts scale by ``factor`` — a localized drift."""
+    phases = list(wl.phases)
+    ph = phases[phase_idx]
+    touches = {o: dataclasses.replace(a, accesses=a.accesses * factor)
+               for o, a in ph.touches.items()}
+    phases[phase_idx] = SimPhaseSpec(ph.name, ph.compute_s, touches)
+    return SimWorkload(wl.name, phases, wl.objects, wl.chunkable)
+
+
+class _AuditingPolicy(UnimemPolicy):
+    """Runs a full (standing-free) solve next to every scoped build,
+    *before* the session enacts any moves, and records equality."""
+
+    def __init__(self):
+        self.audits = []
+
+    def build(self, state):
+        program = super().build(state)
+        if program is not None and state.standing is not None:
+            full, _, _, _ = solve_best(state.planner, state.graph,
+                                       state.profiler, state.config)
+            self.audits.append((plans_equal(program, full),
+                                program.reused_phases))
+        return program
+
+
+@pytest.mark.parametrize("wl_name", sorted(SCENARIO_WORKLOADS))
+def test_scoped_replan_equality_on_scenario_drift(wl_name):
+    """Acceptance: on every scenario-matrix drift case, the session's
+    scoped replan produces a plan equal to a full replan of the same
+    characterized state."""
+    wl = SCENARIO_WORKLOADS[wl_name]()
+    rt = UnimemRuntime(
+        M, RuntimeConfig(fast_capacity_bytes=256 * MB, mover="slack"),
+        cf=CF)
+    rt.policy = _AuditingPolicy()
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    eng = SimulationEngine(M, wl, runtime=rt)
+    eng.run(6)
+    wl2 = _drift_variant(wl, len(wl.phases) // 2)
+    eng.workload = wl2
+    eng.source = SimSource(M, wl2, rt.registry)
+    rt.attach_source(eng.source)
+    eng.run(10)
+    assert rt.n_replans >= 1
+    assert rt.policy.audits, "drift never triggered a replan"
+    assert all(eq for eq, _ in rt.policy.audits)
+
+
+def test_scoped_replan_reuses_in_session_flow():
+    """The scoped drift response actually pays off end to end: a localized
+    kv_serving drift replans with most phase solves reused."""
+    wl = SCENARIO_WORKLOADS["kv_serving"]()
+    rt = UnimemRuntime(
+        M, RuntimeConfig(fast_capacity_bytes=256 * MB, mover="slack"),
+        cf=CF)
+    rt.policy = _AuditingPolicy()
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, static_refs=statics.get(n))
+    eng = SimulationEngine(M, wl, runtime=rt)
+    eng.run(6)
+    wl2 = _drift_variant(wl, 5)
+    eng.workload = wl2
+    eng.source = SimSource(M, wl2, rt.registry)
+    rt.attach_source(eng.source)
+    eng.run(10)
+    assert any(reused > 0 for _, reused in rt.policy.audits)
+    assert all(eq for eq, _ in rt.policy.audits)
+
+
+def test_scoped_replan_off_still_plans():
+    """scoped_replan=False always re-solves every phase (no reuse), with
+    the same resulting plan."""
+    reg, graph, prof, refs, times = build_chunk_fixture(100)
+    planner = Planner(M, reg, CalibrationConstants(), 256 * MB)
+    local = planner.plan_local(graph, prof)
+    again = planner.plan_local(graph, prof,
+                               standing=local.phase_decisions,
+                               standing_digest=local.graph_digest)
+    assert all(d.reused for d in again.phase_decisions)
+    bare = planner.plan_local(graph, prof)
+    assert plans_equal(bare, again)
+    assert not any(d.reused for d in bare.phase_decisions)
+
+
+def test_load_plan_drops_orphaned_inflight_handles():
+    """A rebuild whose coalesce stage retires chunk names and re-registers
+    merged chunks under the same names must not leave the mover's
+    in-flight table aliasing the orphaned objects — a stale handle would
+    match the new chunk's first move as 'already in flight' and swallow
+    it (regression for the coalesce-under-live-copies hazard)."""
+    from repro.core import ProactiveMover, SlackAwareMover
+    from repro.core.planner import MoveOp, PlacementPlan, ScheduledMove
+
+    for mover_cls in (SlackAwareMover, ProactiveMover):
+        reg = ObjectRegistry()
+        clock = {"t": 0.0}
+        from repro.core.mover import ChannelSimBackend
+        backend = ChannelSimBackend(M, lambda: clock["t"], channels=2)
+        old = reg.register(DataObject(name="big#0", size_bytes=8 * MB,
+                                      parent="big", chunk_index=0))
+        mover = mover_cls(reg, backend)
+        h = backend.start_move(old, "fast")
+        mover._inflight["big#0"] = h
+        # the rebuild retires big#0 and re-registers a merged chunk under
+        # the same name
+        reg.remove("big#0")
+        merged = reg.register(DataObject(name="big#0", size_bytes=16 * MB,
+                                         parent="big", chunk_index=0))
+        plan = PlacementPlan(
+            "local", [set()], [MoveOp("big#0", "fast", 0, 0, 16 * MB)],
+            0.0, 0.0,
+            [ScheduledMove(MoveOp("big#0", "fast", 0, 0, 16 * MB),
+                           1.0, 0.5, 0.5)])
+        mover.load_plan(plan, None)
+        assert "big#0" not in mover._inflight
+        if mover_cls is SlackAwareMover:
+            # the new chunk's move actually issues (and is fenced at this
+            # phase, landing it) instead of aliasing the stale handle
+            mover.on_phase_start(plan, 0, 1)
+            assert mover.stats.n_moves == 1
+            assert merged.tier == "fast"
+            assert not h.landed or h.obj is not merged
+
+
+# ---------------------------------------------------------------------------
+# parity goldens: the pipeline is bit-identical to the old build path
+# ---------------------------------------------------------------------------
+class OldPathSession(UnimemRuntime):
+    """The pre-pipeline ``_build_plan`` (PR 3), verbatim: annotate ->
+    partition/resplit -> best-of-two — the oracle the policy pipeline
+    must reproduce bit-for-bit when coalescing is off."""
+
+    def _build_plan(self):
+        assert self.graph is not None
+        self.profiler.annotate_graph(self.graph)
+        if self.config.enable_partitioning:
+            newly = partition_mod.auto_partition(
+                self.registry, self.graph, self.capacity,
+                profiler=self.profiler,
+                skew_aware=self.config.chunk_aware)
+            if not newly:
+                partition_mod.resplit_refs(self.graph, self.registry,
+                                           self.profiler)
+        plans = []
+        if self.config.enable_local_search:
+            plans.append(self.planner.plan_local(self.graph, self.profiler))
+        if self.config.enable_global_search:
+            plans.append(self.planner.plan_global(self.graph, self.profiler))
+        self._drift_scope = None
+        if not plans:
+            self.plan = None
+            return
+        self.plan = min(plans, key=lambda p: p.predicted_iteration_time)
+        self._plan_n_phases = len(self._phase_names)
+        self._baseline_pending = True
+        self.monitor.consume_events()
+        if self.mover is not None:
+            if hasattr(self.mover, "load_plan"):
+                self.mover.load_plan(self.plan, self.graph)
+            self.mover.on_phase_start(self.plan, 0, self._plan_n_phases)
+
+
+PARITY = {
+    "kv_serving": SCENARIO_WORKLOADS["kv_serving"],
+    "graph_chase": SCENARIO_WORKLOADS["graph_chase"],
+    "fsdp_buckets": SCENARIO_WORKLOADS["fsdp_buckets"],
+    "kv_serving_skew": SKEWED_SCENARIO_WORKLOADS["kv_serving_skew"],
+    "paged_serving": SKEWED_SCENARIO_WORKLOADS["paged_serving"],
+}
+
+
+@pytest.mark.parametrize("mover", ["slack", "fifo"])
+@pytest.mark.parametrize("wl_name", sorted(PARITY))
+def test_pipeline_parity_with_old_build_path(wl_name, mover):
+    """Acceptance: with coalescing disabled, the policy pipeline produces
+    bit-identical plans and identical virtual-time traces to the
+    pre-pipeline build path, across the scenario matrix and both movers."""
+    cfg = lambda: RuntimeConfig(fast_capacity_bytes=256 * MB, mover=mover,
+                                drift_threshold=10.0, coalesce=False)
+    old_res, old_rt = run_scenario(PARITY[wl_name](), config=cfg(),
+                                   runtime_cls=OldPathSession)
+    new_res, new_rt = run_scenario(PARITY[wl_name](), config=cfg())
+    assert old_rt.plan is not None and new_rt.plan is not None
+    assert isinstance(new_rt.plan, PlanProgram)
+    assert not isinstance(old_rt.plan, PlanProgram)
+    assert old_rt.plan.moves == new_rt.plan.moves
+    assert old_rt.plan.residents == new_rt.plan.residents
+    assert (old_rt.plan.predicted_iteration_time
+            == new_rt.plan.predicted_iteration_time)
+    assert old_rt.plan.strategy == new_rt.plan.strategy
+    assert old_res.iteration_times == new_res.iteration_times
+    assert {o.name: o.tier for o in old_rt.registry} \
+        == {o.name: o.tier for o in new_rt.registry}

@@ -209,6 +209,9 @@ GOLDEN = {
                       slack_stall=0.0503, overlap=0.43, overlap_time=0.60),
     "graph_chase": dict(fifo_steady=1.2596, slack_steady=0.9769,
                         slack_stall=0.0, overlap=0.93, overlap_time=0.98),
+    "fsdp_buckets": dict(fifo_steady=1.2875, slack_steady=1.2525,
+                         slack_stall=0.0258, overlap=0.54,
+                         overlap_time=0.48),
 }
 
 
