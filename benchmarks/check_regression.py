@@ -6,8 +6,13 @@ beyond its tolerance.
 
 * ``scenarios.csv`` — steady-state iteration times (virtual-time, hence
   deterministic) normalized to DRAM-only: ``fifo``/``slack`` on the base
-  matrix, ``uniform``/``hotchunk`` on the skewed variants.  Higher is
-  worse; >5% regression fails.
+  matrix, ``uniform``/``hotchunk`` on the skewed variants,
+  ``uniform64``/``refined`` on the multi-resolution rows and ``unimem``
+  on the lru-ablation rows.  Higher is worse; >5% regression fails.
+  The ``_mr`` rows additionally carry absolute gates: refinement must
+  keep equal-or-better slack than the uniform histogram at the same bin
+  budget (``mr_gain`` floor 1.0) with fast-resident hot-head chunks
+  finer than one legacy bin (``hot_chunk_frac`` ceiling 1.0).
 * ``planner_latency.csv`` — the legacy/vectorized ``speedup`` ratio (wall
   clock, so machine-noisy: the ratio is compared at 50% tolerance) plus an
   absolute floor: the 2,000-chunk row must stay >= 10x.
@@ -27,15 +32,27 @@ from typing import Dict, Tuple
 
 # watched metrics: prefix -> (keys, higher_is_worse, rel tolerance)
 WATCHES = {
-    "scenario_": (("fifo", "slack", "uniform", "hotchunk"), True, 0.05),
+    "scenario_": (("fifo", "slack", "uniform", "hotchunk", "uniform64",
+                   "refined", "unimem"), True, 0.05),
     "planner_": (("speedup", "scoped_speedup"), False, 0.50),
 }
-# absolute floors: (row prefix, key) -> minimum acceptable value
+# absolute floors: (row, key) -> minimum acceptable value
 FLOORS = {
     ("planner_n2000", "speedup"): 10.0,
     # scoped replan on single-phase drift at 2k chunks must stay >=5x
     # faster than a full replan (the scoped-replan latency gate)
     ("planner_replan_n2000", "scoped_speedup"): 5.0,
+    # multi-resolution refinement must reach equal-or-better steady slack
+    # than the uniform histogram at the same total bin budget
+    ("scenario_graph_chase_skew_mr", "mr_gain"): 1.0,
+    ("scenario_kv_serving_skew_mr", "mr_gain"): 1.0,
+}
+# absolute ceilings: (row, key) -> maximum acceptable value
+CEILINGS = {
+    # the refined hot-head chunks must stay finer than one legacy
+    # (1/64-wide) histogram bin on the skew scenarios
+    ("scenario_graph_chase_skew_mr", "hot_chunk_frac"): 1.0,
+    ("scenario_kv_serving_skew_mr", "hot_chunk_frac"): 1.0,
 }
 
 
@@ -85,9 +102,24 @@ def check(fresh: pathlib.Path, baseline: pathlib.Path) -> int:
                         f"{name}: {k} regressed {b:.4f} -> {f:.4f} "
                         f"(> {tol:.0%} tolerance)")
         for (row, k), floor in FLOORS.items():
-            if name == row and got.get(k, floor) < floor:
+            if name != row:
+                continue
+            if k not in got:    # a gated metric must not vanish silently
+                failures.append(f"{name}: gated metric {k} missing")
+            elif got[k] < floor:
                 failures.append(
-                    f"{name}: {k}={got.get(k):.2f} below absolute floor {floor}")
+                    f"{name}: {k}={got[k]:.2f} below absolute floor {floor}")
+        for (row, k), ceil in CEILINGS.items():
+            if name != row:
+                continue
+            if k not in got:    # a gated metric must not vanish silently
+                failures.append(f"{name}: gated metric {k} missing")
+            # strict: reaching the ceiling already fails (hot_chunk_frac
+            # == 1.0 means no chunk finer than one legacy bin)
+            elif got[k] >= ceil:
+                failures.append(
+                    f"{name}: {k}={got[k]:.2f} at/above absolute "
+                    f"ceiling {ceil}")
     for msg in failures:
         print(f"REGRESSION {msg}")
     if not failures:

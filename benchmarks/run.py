@@ -17,6 +17,7 @@ import time
 from repro.core import PAPER_DRAM_NVM, calibrate
 from repro.sim import (NPB_WORKLOADS, SCENARIO_WORKLOADS,
                        SKEWED_SCENARIO_WORKLOADS, lm_train_workload)
+from repro.sim.workloads import graph_chase_skewed, kv_serving_skewed
 from repro.core.tiers import TPU_V5E
 
 from .common import (DEFAULT_DRAM, MB, run_static, run_unimem, run_xmen)
@@ -279,6 +280,79 @@ def bench_scenarios() -> None:
              f"overlap={s['overlap_fraction']:.2f};"
              f"n_chunks={n_chunks};"
              f"strategy={s['strategy']}")
+
+    # multi-resolution refinement (PR 5): the full multi-res mode
+    # (adaptive re-binning plus its enactment-consistent solve — fine
+    # chunks need the churn-guarded pricing, so the mode ships as one
+    # switch) vs the legacy fixed-width pipeline at the SAME total bin
+    # budget (64), on skewed workloads whose true densities carry
+    # structure finer than one uniform bin.  Global search is pinned off
+    # for both arms (like drift_threshold pins replanning above) so the
+    # best-of-two chooser's prediction noise cannot dominate the rows;
+    # the committed gates enforce equal-or-better steady slack
+    # (mr_gain >= 1) with hot-head chunks finer than one legacy bin
+    # (hot_chunk_frac < 1).
+    from repro.core.partition import chunk_spans
+
+    mr_scenarios = (
+        ("graph_chase_skew", lambda: graph_chase_skewed(density_bins=256)),
+        ("kv_serving_skew",
+         lambda: kv_serving_skewed(sub=16, window=4, taper=0.4)),
+    )
+    for wl_name, make in mr_scenarios:
+        wl = make()
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        common = dict(drift_threshold=10.0, chunk_aware=True,
+                      histogram_bins=64, profile_iterations=3,
+                      enable_global_search=False)
+        uni, _ = run_unimem(mach, wl, **common)
+        ref, rrt = run_unimem(mach, wl, histogram_refine=True, **common)
+        us = (time.perf_counter() - t0) * 1e6
+        d = dram.steady_iteration_time
+        # finest fast-resident hot-head chunk vs one legacy (1/64) bin —
+        # uncapped, so a regression past 1.0 is visible to the nightly
+        # ceiling gate
+        frac = float("inf")
+        parents = sorted({o.parent for o in rrt.registry
+                          if o.parent is not None})
+        n_chunks = 0
+        for par in parents:
+            spans = chunk_spans(rrt.registry, par)
+            n_chunks += len(spans)
+            size = spans[-1][2]
+            fast = [c.size_bytes for c, _, _ in spans if c.tier == "fast"]
+            if fast:
+                frac = min(frac, min(fast) / (size / 64))
+        if frac == float("inf"):
+            frac = 64.0         # nothing fast-resident: fail the ceiling
+        emit(f"scenario_{wl_name}_mr", us,
+             f"nvm={run_static(mach, wl, 'slow').steady_iteration_time / d:.3f};"
+             f"uniform64={uni.steady_iteration_time / d:.3f};"
+             f"refined={ref.steady_iteration_time / d:.3f};"
+             f"mr_gain={uni.steady_iteration_time / ref.steady_iteration_time:.3f};"
+             f"hot_chunk_frac={frac:.3f};"
+             f"n_chunks={n_chunks}")
+
+    # lru ablation (PR 5): the policy registry's clock/LRU baseline
+    # (solve stage replaced, characterization stages shared) against the
+    # paper's benefit-model planner, one row per scenario.  LRU wins on
+    # some rotations (fsdp_buckets) and loses where lookahead triggers
+    # matter (graph_chase) — the committed rows record the honest split.
+    for wl_name, make in {**SCENARIO_WORKLOADS,
+                          **SKEWED_SCENARIO_WORKLOADS}.items():
+        wl = make()
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        uni, _ = run_unimem(mach, wl, drift_threshold=10.0)
+        lru, _ = run_unimem(mach, wl, drift_threshold=10.0, policy="lru")
+        us = (time.perf_counter() - t0) * 1e6
+        d = dram.steady_iteration_time
+        emit(f"scenario_{wl_name}_ablation", us,
+             f"unimem={uni.steady_iteration_time / d:.3f};"
+             f"lru={lru.steady_iteration_time / d:.3f};"
+             f"lru_over_unimem="
+             f"{lru.steady_iteration_time / uni.steady_iteration_time:.3f}")
     write_rows("scenarios.csv", "scenario_")
 
 

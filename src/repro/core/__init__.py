@@ -3,6 +3,7 @@ contribution, adapted to TPU memory tiers)."""
 
 from .backends import available_backends, make_backend, register_backend
 from .data_objects import DataObject, ObjectRegistry
+from .histogram import Histogram, uniform_mass
 from .instrumentation import (InstrumentationSource, ManualSource,
                               PhaseSample, XlaCostAnalysisSource)
 from .knapsack import Item, solve as knapsack_solve
@@ -27,7 +28,8 @@ from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
                     V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
 
 __all__ = [
-    "DataObject", "ObjectRegistry", "Item", "knapsack_solve",
+    "DataObject", "ObjectRegistry", "Histogram", "uniform_mass",
+    "Item", "knapsack_solve",
     "VariationMonitor", "JaxTierBackend", "AsyncJaxTierBackend",
     "CpuPoolBackend", "ProactiveMover", "SimTierBackend",
     "ChannelSimBackend", "SlackAwareMover", "MoveRecord",

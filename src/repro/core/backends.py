@@ -54,14 +54,17 @@ def make_backend(name: str, machine: MachineProfile, **options: Any):
 # built-in backends
 # ---------------------------------------------------------------------------
 def _sim_factory(machine: MachineProfile, *, now_fn=None, mover: str = "slack",
-                 channels: int = 2, **_: Any):
+                 channels: int = 2, priorities=None, **_: Any):
     """Simulated copy engine matched to the configured migration engine:
-    the slack mover gets the multi-channel engine (tier flips on landing),
-    the FIFO baseline the single serial queue."""
+    the slack mover gets the multi-channel engine (tier flips on landing;
+    optional per-channel ``priorities`` confine bulk evictions to the
+    lowest-priority channels), the FIFO baseline the single serial
+    queue."""
     if now_fn is None:
         now_fn = lambda: 0.0            # noqa: E731 — static virtual clock
     if mover == "slack":
-        return ChannelSimBackend(machine, now_fn, channels=channels)
+        return ChannelSimBackend(machine, now_fn, channels=channels,
+                                 priorities=priorities)
     return SimTierBackend(machine, now_fn)
 
 

@@ -29,14 +29,22 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
 import numpy as np
+
+from .histogram import Histogram
 
 
 @dataclasses.dataclass
 class PhaseSample:
     """One phase execution's instrumentation (profiler input, pre-sampling).
+
+    ``access_bins`` values are either legacy fixed-width weight sequences
+    (relative weights over equal-width bins) or multi-resolution
+    :class:`~.histogram.Histogram`\\ s (variable-width bins, e.g. one bin
+    per pytree leaf) — the profiler re-samples either onto its own
+    (budgeted, adaptively refined) bin edges.
 
     ``elapsed`` is the phase's execution time in seconds when the source
     defines virtual time (the simulator) or an analytic estimate; ``None``
@@ -45,7 +53,7 @@ class PhaseSample:
 
     accesses: Dict[str, float] = dataclasses.field(default_factory=dict)
     time_shares: Optional[Dict[str, float]] = None
-    access_bins: Optional[Dict[str, Sequence[float]]] = None
+    access_bins: Optional[Dict[str, Union[Sequence[float], Histogram]]] = None
     elapsed: Optional[float] = None
 
 
@@ -172,13 +180,26 @@ class XlaCostAnalysisSource:
     the skew-aware partitioner needs, with chunk boundaries free to align
     to leaf boundaries.
 
+    ``edges="uniform"`` (default) spreads each leaf's footprint over a
+    fixed grid of ``n_bins`` equal-width bins (the legacy representation);
+    ``edges="leaf"`` emits a multi-resolution
+    :class:`~.histogram.Histogram` with one variable-width bin per
+    registered leaf span — the instrumentation-native resolution, exact
+    per-leaf attribution with no grid quantization (small hot leaves keep
+    their own bins instead of smearing into neighbors).
+
     Caveat: ``jax.jit`` prunes unused arguments by default; bind programs
     whose listed operands are all used (or pass ``keep_unused=True``)."""
 
-    def __init__(self, session: Any, *, n_bins: int = 64):
+    def __init__(self, session: Any, *, n_bins: int = 64,
+                 edges: str = "uniform"):
+        if edges not in ("uniform", "leaf"):
+            raise ValueError(f"edges must be 'uniform' or 'leaf', "
+                             f"got {edges!r}")
         self.registry = session.registry
         self.machine = session.machine
         self.n_bins = int(n_bins)
+        self.edges = edges
         self._samples: Dict[str, PhaseSample] = {}
 
     # -- binding -------------------------------------------------------------
@@ -214,12 +235,17 @@ class XlaCostAnalysisSource:
 
         footprint: Dict[str, float] = {}
         bins: Dict[str, np.ndarray] = {}
+        leaf_mass: Dict[str, Dict[int, float]] = {}
         for pidx, (name, off, nbytes) in param_spans.items():
             n_uses = uses.get(pidx, 0)
             if n_uses <= 0 or nbytes <= 0:
                 continue
             mass = float(nbytes) * n_uses
             footprint[name] = footprint.get(name, 0.0) + mass
+            if self.edges == "leaf":
+                lm = leaf_mass.setdefault(name, {})
+                lm[off] = lm.get(off, 0.0) + mass
+                continue
             size = max(self.registry[name].size_bytes, 1)
             hist = bins.setdefault(name, np.zeros(self.n_bins))
             # spread the leaf's footprint over the bins its span covers
@@ -235,14 +261,40 @@ class XlaCostAnalysisSource:
                 if overlap > 0:
                     hist[b] += mass * overlap / max(hi_b - lo_b, 1e-12)
 
+        access_bins: Dict[str, Any] = {
+            n: h.tolist() for n, h in bins.items() if float(h.sum()) > 0.0}
+        for name, lm in leaf_mass.items():
+            h = self._leaf_histogram(name, lm)
+            if h is not None:
+                access_bins[name] = h
+
         line = float(getattr(self.machine, "cacheline_bytes", 64))
         sample = PhaseSample(
             accesses={n: fp / line for n, fp in footprint.items()},
-            access_bins={n: h.tolist() for n, h in bins.items()
-                         if float(h.sum()) > 0.0} or None,
+            access_bins=access_bins or None,
             elapsed=elapsed)
         self._samples[phase_name] = sample
         return sample
+
+    def _leaf_histogram(self, name: str,
+                        leaf_mass: Dict[int, float]) -> Optional[Histogram]:
+        """Variable-width histogram with one bin per registered leaf span
+        (``edges="leaf"``): each leaf's footprint lands exactly in its own
+        bin — instrumentation-native multi-resolution attribution."""
+        obj = self.registry[name]
+        size = max(obj.size_bytes, 1)
+        spans = obj.leaf_spans or [("", 0, obj.size_bytes)]
+        edges, counts, pos = [0.0], [], 0
+        for _, off, nbytes in spans:
+            if nbytes <= 0:
+                continue
+            counts.append(leaf_mass.get(off, 0.0))
+            pos = off + nbytes
+            edges.append(min(pos / size, 1.0))
+        if not counts or sum(counts) <= 0.0:
+            return None
+        edges[-1] = 1.0
+        return Histogram(edges, counts)
 
     # -- protocol ------------------------------------------------------------
     def collect(self, phase_name: str) -> PhaseSample:

@@ -353,6 +353,14 @@ class ChannelSimBackend:
     keeps completion times deterministic and monotone in issue order per
     channel.
 
+    **Prioritized channels** (CUDA-stream-style): ``priorities`` assigns
+    each channel a priority class.  Bulk demotion traffic (evictions,
+    ``dst == "slow"``) may only queue on the *minimum*-priority channels,
+    while urgent fetches pick the earliest-free channel of any class — so
+    a burst of evictions can never head-of-line-block the fetch a phase
+    is about to fence on.  ``None`` (or all-equal priorities) reproduces
+    the unprioritized engine exactly.
+
     Unlike :class:`SimTierBackend`, an object's ``tier`` flips only when its
     copy *lands* — callers advance landings with :meth:`settle` (at phase
     boundaries) or force completion with :meth:`complete` after absorbing a
@@ -361,12 +369,24 @@ class ChannelSimBackend:
     """
 
     def __init__(self, machine: MachineProfile, now_fn: Callable[[], float],
-                 channels: int = 2):
+                 channels: int = 2,
+                 priorities: Optional[List[int]] = None):
         if channels < 1:
             raise ValueError("need at least one copy channel")
         self.machine = machine
         self.now_fn = now_fn
         self.channels = channels
+        self.priorities = list(priorities) if priorities is not None else None
+        if self.priorities is not None and len(self.priorities) != channels:
+            raise ValueError(
+                f"priorities must name every channel: got "
+                f"{len(self.priorities)} for {channels} channels")
+        if self.priorities is None or len(set(self.priorities)) <= 1:
+            self._bulk_channels: List[int] = list(range(channels))
+        else:
+            lowest = min(self.priorities)
+            self._bulk_channels = [c for c, p in enumerate(self.priorities)
+                                   if p == lowest]
         self._free_at = [0.0] * channels
         self.copies: List[_ChannelCopy] = []
 
@@ -387,7 +407,10 @@ class ChannelSimBackend:
         bandwidth never exceeds ``copy_bw``.  Rates are not raised back when
         a copy finishes — a deterministic, slightly conservative model."""
         now = self.now_fn()
-        ch = min(range(self.channels), key=lambda c: self._free_at[c])
+        # bulk demotions are confined to the minimum-priority channels;
+        # fetches pick the earliest-free channel of any class
+        allowed = self._bulk_channels if dst == "slow" else range(self.channels)
+        ch = min(allowed, key=lambda c: self._free_at[c])
         start = max(now, self._free_at[ch])
         if after is not None:
             start = max(start, after.done)

@@ -37,6 +37,17 @@ measured per-phase access densities converged and whose current tiers
 agree (never past the conservative ``capacity/chunk_divisor`` ceiling),
 capping registry growth across long drift sequences while leaving density
 edges — and therefore plan quality — intact.
+
+**Multi-resolution mode** (refined histograms, ``RuntimeConfig.
+histogram_refine``): measured histograms are variable-width
+:class:`~.histogram.Histogram`\\ s whose hot bins have been adaptively
+re-binned finer, so (a) :func:`skew_boundaries` with ``local_floor`` may
+cut below the legacy one-bin ceiling — each segment's min-chunk floor is
+bounded by the *finest measured bin overlapping it*, with splits
+allocated worst-imbalance-first (mass-weighted) under the chunk budget —
+and (b) :func:`resplit_hot_chunks` re-splits *existing* chunks whose
+refined densities turned imbalanced, which is what lets a previously
+coalesced chunk re-split when drift re-heats it.
 """
 
 from __future__ import annotations
@@ -47,6 +58,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .data_objects import DataObject, ObjectRegistry
+from .histogram import Histogram, uniform_mass
 from .phase import PhaseGraph
 from .profiler import PhaseProfiler
 
@@ -61,25 +73,32 @@ def should_partition(obj: DataObject, fast_capacity: int,
 # ---------------------------------------------------------------------------
 # measured-histogram geometry
 # ---------------------------------------------------------------------------
-def bin_mass(weights: Sequence[float], lo_frac: float, hi_frac: float) -> float:
+def bin_mass(weights, lo_frac: float, hi_frac: float) -> float:
     """Integral of the piecewise-constant access density described by
-    ``weights`` (relative weights over equal-width bins spanning [0, 1])
-    over the fractional byte range [lo_frac, hi_frac)."""
-    w = np.asarray(weights, dtype=np.float64)
-    total = w.sum()
-    if total <= 0.0 or w.size == 0:
-        return max(0.0, hi_frac - lo_frac)      # uniform fallback
-    b = w.size
-    lo = min(max(lo_frac, 0.0), 1.0) * b
-    hi = min(max(hi_frac, 0.0), 1.0) * b
-    if hi <= lo:
-        return 0.0
-    lo_i, hi_i = int(math.floor(lo)), int(math.ceil(hi))
-    mass = w[lo_i:hi_i].sum()
-    mass -= (lo - lo_i) * w[lo_i]                       # clip partial head
-    if hi_i > hi:
-        mass -= (hi_i - hi) * w[min(hi_i, b) - 1]       # clip partial tail
-    return float(max(mass, 0.0) / total)
+    ``weights`` over the fractional byte range [lo_frac, hi_frac).
+
+    ``weights`` is either a legacy fixed-width weight sequence (relative
+    weights over equal-width bins spanning [0, 1]) or a multi-resolution
+    :class:`~.histogram.Histogram` (variable-width bins); uniform inputs
+    take the bit-identical legacy arithmetic path."""
+    if isinstance(weights, Histogram):
+        return weights.mass_fraction(lo_frac, hi_frac)
+    return uniform_mass(weights, lo_frac, hi_frac)
+
+
+def _finest_width(bins: Sequence, lo_frac: float, hi_frac: float) -> float:
+    """Narrowest measured bin (byte fraction) overlapping [lo_frac,
+    hi_frac) across all phase histograms — the local measurement
+    resolution the partitioner's min-chunk floor is bounded by."""
+    finest = 1.0
+    for b in bins:
+        if isinstance(b, Histogram):
+            finest = min(finest, b.finest_width(lo_frac, hi_frac))
+        else:
+            n = len(b)
+            if n:
+                finest = min(finest, 1.0 / n)
+    return finest
 
 
 def chunk_spans(registry: ObjectRegistry, parent: str
@@ -94,9 +113,25 @@ def chunk_spans(registry: ObjectRegistry, parent: str
     return out
 
 
-def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
+def _clean_bins(phase_bins: Sequence) -> List:
+    """Drop empty / zero-mass histograms; pass Histograms through and
+    coerce legacy sequences to float arrays."""
+    out: List = []
+    for b in phase_bins:
+        if isinstance(b, Histogram):
+            if b.n_bins and b.total > 0.0:
+                out.append(b)
+        else:
+            arr = np.asarray(b, dtype=np.float64)
+            if arr.size and arr.sum() > 0.0:
+                out.append(arr)
+    return out
+
+
+def skew_boundaries(size_bytes: int, phase_bins: Sequence,
                     *, coarse_bytes: int, min_chunk_bytes: int,
-                    tol: float = 0.15, max_chunks: int = 64) -> List[int]:
+                    tol: float = 0.15, max_chunks: int = 64,
+                    local_floor: bool = False) -> List[int]:
     """Chunk boundaries from measured access histograms by recursive
     bisection.
 
@@ -104,12 +139,20 @@ def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
     conservative ceiling — large chunks throttle the mover regardless of
     skew), or while any profiled phase's access mass is imbalanced across
     its midpoint by more than ``tol`` (relative to the segment's mass) and
-    both halves stay above ``min_chunk_bytes``.  Returns interior + end
-    boundaries: ``[b_1, ..., b_k, size_bytes]``.
-    """
-    bins = [np.asarray(b, dtype=np.float64) for b in phase_bins]
-    bins = [b for b in bins if b.size and b.sum() > 0.0]
-    max_depth = max(1, int(math.ceil(math.log2(max(max_chunks, 2)))))
+    both halves stay above the min-chunk floor.  ``phase_bins`` entries are
+    legacy fixed-width weight sequences or multi-resolution
+    :class:`~.histogram.Histogram`\\ s.  Returns interior + end boundaries:
+    ``[b_1, ..., b_k, size_bytes]``.
+
+    With ``local_floor`` (the multi-resolution mode), the floor of each
+    segment is bounded by the *finest measured bin* overlapping it rather
+    than a single global constant: where refined histograms carry fine hot
+    bins the cuts may go just as fine (down to ``min_chunk_bytes``), while
+    coarsely-binned cold spans stop at their own resolution.  Splits are
+    then allocated worst-imbalance-first under the ``max_chunks`` budget
+    instead of depth-limited, so a sharp hot head can cut far below the
+    legacy one-bin ceiling without exploding the chunk count."""
+    bins = _clean_bins(phase_bins)
 
     def imbalance(lo: int, mid: int, hi: int) -> float:
         worst = 0.0
@@ -121,6 +164,13 @@ def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
             worst = max(worst, abs(2.0 * left - seg) / seg)
         return worst
 
+    if local_floor:
+        return _mr_boundaries(size_bytes, bins, imbalance, 0, size_bytes,
+                              coarse_bytes=coarse_bytes,
+                              min_chunk_bytes=min_chunk_bytes, tol=tol,
+                              max_chunks=max_chunks)
+
+    max_depth = max(1, int(math.ceil(math.log2(max(max_chunks, 2)))))
     bounds: List[int] = []
 
     def rec(lo: int, hi: int, depth: int) -> None:
@@ -137,6 +187,52 @@ def skew_boundaries(size_bytes: int, phase_bins: Sequence[Sequence[float]],
 
     rec(0, size_bytes, 0)
     return bounds
+
+
+def _mr_boundaries(size_bytes: int, bins: Sequence, imbalance, seg_lo: int,
+                   seg_hi: int, *, coarse_bytes: int, min_chunk_bytes: int,
+                   tol: float, max_chunks: int) -> List[int]:
+    """Worst-imbalance-first bisection of [seg_lo, seg_hi) under a chunk
+    budget, with the per-segment min-chunk floor bounded by the finest
+    measured bin overlapping the segment (multi-resolution mode)."""
+    import heapq
+
+    def floor_of(lo: int, hi: int) -> int:
+        fw = _finest_width(bins, lo / size_bytes, hi / size_bytes)
+        return max(min_chunk_bytes, int(fw * size_bytes))
+
+    def seg_mass(lo: int, hi: int) -> float:
+        return max((bin_mass(b, lo / size_bytes, hi / size_bytes)
+                    for b in bins), default=0.0)
+
+    def entry(lo: int, hi: int):
+        size = hi - lo
+        mid = lo + size // 2
+        must = size > coarse_bytes
+        imb = imbalance(lo, mid, hi) if mid > lo and mid < hi else 0.0
+        may = (mid > lo and mid < hi and imb > tol
+               and size >= 2 * floor_of(lo, hi))
+        # mandatory splits first (the mover-throttle ceiling holds
+        # regardless of the budget), then by mass-weighted imbalance: a
+        # badly-cut *hot* segment wins split budget over an equally
+        # imbalanced cold one (relative imbalance alone would spend the
+        # budget resolving noise in the tail)
+        return (0 if must else 1, -imb * seg_mass(lo, hi), lo, hi,
+                must or may)
+
+    heap = [entry(seg_lo, seg_hi)]
+    done: List[Tuple[int, int]] = []
+    while heap:
+        rank, _, lo, hi, splittable = heapq.heappop(heap)
+        over_budget = len(heap) + len(done) + 1 >= max_chunks
+        if not splittable or (over_budget and rank != 0):
+            done.append((lo, hi))
+            continue
+        mid = lo + (hi - lo) // 2
+        heapq.heappush(heap, entry(lo, mid))
+        heapq.heappush(heap, entry(mid, hi))
+    done.sort()
+    return [hi for _, hi in done]
 
 
 def snap_to_leaf_boundaries(bounds: Sequence[int],
@@ -374,6 +470,134 @@ def coalesce_chunks(registry: ObjectRegistry, graph: PhaseGraph,
 
 
 # ---------------------------------------------------------------------------
+# hot-chunk re-splitting (multi-resolution mode)
+# ---------------------------------------------------------------------------
+def resplit_hot_chunks(registry: ObjectRegistry, graph: PhaseGraph,
+                       profiler: Optional[PhaseProfiler],
+                       fast_capacity: int, *, chunk_divisor: int = 4,
+                       tol: float = 0.15, max_chunks: int = 64,
+                       min_chunk_divisor: int = 64,
+                       leaf_aligned: bool = False
+                       ) -> Dict[str, Tuple[int, int]]:
+    """Re-split existing chunks whose measured densities turned imbalanced.
+
+    Bisection only runs when a parent is first partitioned, and
+    :func:`coalesce_chunks` only ever merges — so when drift re-heats a
+    merged (or originally coarse) chunk, nothing re-cuts it and its hot
+    head stays smeared across the whole chunk.  With multi-resolution
+    histograms the refined bin edges *can* resolve sub-chunk structure;
+    this pass walks every partitioned parent's chunks and re-splits any
+    chunk whose measured per-phase mass is imbalanced beyond ``tol``
+    (worst-imbalance-first, min-chunk floor bounded by the finest local
+    bin, parent chunk count capped at ``max_chunks``).
+
+    Sub-chunks inherit the split chunk's tier/pinned state, and the split
+    chunk's per-phase reference counts are conserved exactly — distributed
+    over its sub-chunks by measured histogram mass (size fractions when a
+    phase has no histogram).  Returns ``{parent: (before, after)}`` for
+    every parent that changed.
+
+    ``leaf_aligned`` makes the pass a **no-op**: leaf-aligned chunks are
+    whole-array units by contract, a midpoint bisection would cut inside
+    a leaf (exactly the sub-leaf copies the flag forbids), and the
+    parent's leaf spans are no longer recorded after partitioning, so
+    cuts cannot be re-snapped.  (Recording per-chunk leaf spans to allow
+    leaf-granular re-splits is a follow-on.)"""
+    if leaf_aligned:
+        return {}
+    coarse = max(1, fast_capacity // chunk_divisor)
+    floor = max(coarse // min_chunk_divisor, 1)
+    out: Dict[str, Tuple[int, int]] = {}
+    parents = sorted({o.parent for o in registry if o.parent is not None})
+    for parent in parents:
+        spans = chunk_spans(registry, parent)
+        if not spans:
+            continue
+        if any(c.payload is not None for c, _, _ in spans):
+            continue        # physical slices: re-cutting would copy
+        phase_bins = (profiler.object_bins(parent)
+                      if profiler is not None else {})
+        bins = _clean_bins(list(phase_bins.values()))
+        if not bins:
+            continue        # no measured densities: nothing to judge by
+        size = spans[-1][2] or 1
+
+        def imbalance(lo: int, mid: int, hi: int) -> float:
+            worst = 0.0
+            for b in bins:
+                seg = bin_mass(b, lo / size, hi / size)
+                if seg <= 1e-12:
+                    continue
+                left = bin_mass(b, lo / size, mid / size)
+                worst = max(worst, abs(2.0 * left - seg) / seg)
+            return worst
+
+        budget = max_chunks - len(spans)
+        sub_bounds: Dict[str, List[int]] = {}
+        # allocate the parent-wide split budget worst-imbalance-first
+        # across chunks (span order would let an early, mildly imbalanced
+        # chunk starve the re-heated one this pass exists for)
+        def chunk_imb(lo: int, hi: int) -> float:
+            mid = lo + (hi - lo) // 2
+            return imbalance(lo, mid, hi) if mid > lo and mid < hi else 0.0
+
+        for c, lo, hi in sorted(spans,
+                                key=lambda s_: (-chunk_imb(s_[1], s_[2]),
+                                                s_[1])):
+            if budget <= 0:
+                break
+            cuts = _mr_boundaries(
+                size, bins, imbalance, lo, hi, coarse_bytes=coarse,
+                min_chunk_bytes=floor, tol=tol,
+                max_chunks=min(budget + 1, max_chunks))
+            if len(cuts) > 1:
+                sub_bounds[c.name] = cuts
+                budget -= len(cuts) - 1
+        if not sub_bounds:
+            continue
+
+        # rebuild the parent's chunking with the re-split chunks expanded
+        specs: List[Tuple[int, str, bool]] = []
+        merged_refs: List[Dict[int, float]] = []
+        for c, lo, hi in spans:
+            cuts = sub_bounds.get(c.name, [hi])
+            seg_lo = lo
+            for cut in cuts:
+                specs.append((cut - seg_lo, c.tier, c.pinned))
+                refs: Dict[int, float] = {}
+                for phi in range(len(graph)):
+                    ph = graph[phi]
+                    if c.name not in ph.refs:
+                        continue
+                    total_ref = ph.refs[c.name]
+                    b = phase_bins.get(phi)
+                    chunk_m = (bin_mass(b, lo / size, hi / size)
+                               if b is not None else 0.0)
+                    if b is not None and chunk_m > 1e-300:
+                        frac = bin_mass(b, seg_lo / size,
+                                        cut / size) / chunk_m
+                    else:
+                        frac = (cut - seg_lo) / max(hi - lo, 1)
+                    r = total_ref * frac
+                    if r > 0.0:
+                        refs[phi] = r
+                merged_refs.append(refs)
+                seg_lo = cut
+        for c, _, _ in spans:
+            for ph in graph:
+                ph.refs.pop(c.name, None)
+            registry.remove(c.name)
+        for k, (sz, tier, pinned) in enumerate(specs):
+            registry.register(DataObject(
+                name=f"{parent}#{k}", size_bytes=sz, chunkable=False,
+                parent=parent, chunk_index=k, tier=tier, pinned=pinned))
+            for phi, r in merged_refs[k].items():
+                graph[phi].refs[f"{parent}#{k}"] = r
+        out[parent] = (len(spans), len(specs))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # policy
 # ---------------------------------------------------------------------------
 def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
@@ -381,17 +605,21 @@ def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
                    profiler: Optional[PhaseProfiler] = None,
                    skew_aware: bool = True,
                    max_chunks: int = 64,
-                   leaf_aligned: bool = False) -> List[str]:
+                   leaf_aligned: bool = False,
+                   multi_res: bool = False) -> List[str]:
     """Chunk each chunkable object that cannot fit the fast tier.
 
     With measured per-object histograms (``profiler`` given and the object
     observed with per-chunk attribution) and ``skew_aware``, boundaries come
     from :func:`skew_boundaries`; otherwise the paper's conservative equal
-    split into ``capacity/chunk_divisor``-byte chunks.  With
-    ``leaf_aligned`` and a pytree-registered object, cuts snap to the
-    nearest leaf boundary (chunks moveable as whole arrays).  Per-phase
-    references are re-attributed from the same histograms
-    (:func:`resplit_refs`)."""
+    split into ``capacity/chunk_divisor``-byte chunks.  With ``multi_res``
+    (refined multi-resolution histograms), the bisection allocates splits
+    worst-imbalance-first and its min-chunk floor is bounded by the finest
+    *local* measured bin instead of a global constant — hot-head chunks can
+    cut below the legacy one-bin ceiling.  With ``leaf_aligned`` and a
+    pytree-registered object, cuts snap to the nearest leaf boundary
+    (chunks moveable as whole arrays).  Per-phase references are
+    re-attributed from the same histograms (:func:`resplit_refs`)."""
     coarse = max(1, fast_capacity // chunk_divisor)
     partitioned = []
     for name in list(registry.names()):
@@ -401,9 +629,12 @@ def auto_partition(registry: ObjectRegistry, graph: PhaseGraph,
         phase_bins = (list(profiler.object_bins(name).values())
                       if profiler is not None else [])
         if skew_aware and phase_bins:
+            min_chunk = (max(coarse // 64, 1) if multi_res
+                         else max(coarse // 16, 1))
             bounds = skew_boundaries(
                 obj.size_bytes, phase_bins, coarse_bytes=coarse,
-                min_chunk_bytes=max(coarse // 16, 1), max_chunks=max_chunks)
+                min_chunk_bytes=min_chunk, max_chunks=max_chunks,
+                local_floor=multi_res)
         else:
             n_chunks = max(1, math.ceil(obj.size_bytes / coarse))
             bounds = [min((i + 1) * coarse, obj.size_bytes)

@@ -373,13 +373,24 @@ class Planner:
     def __init__(self, machine: MachineProfile, registry: ObjectRegistry,
                  cf: Optional[CalibrationConstants] = None,
                  fast_capacity_bytes: Optional[int] = None,
-                 vectorized: bool = True):
+                 vectorized: bool = True,
+                 enact_consistent: bool = False):
         self.machine = machine
         self.registry = registry
         self.cf = cf or CalibrationConstants()
         self.capacity = (fast_capacity_bytes if fast_capacity_bytes is not None
                          else machine.fast.capacity_bytes)
         self.vectorized = vectorized
+        # Enactment-consistent drop order for the local solve (multi-res
+        # mode): when the knapsack declines a referenced resident that
+        # enactment can never actually evict, the selection over-commits
+        # the budget and the last-enacted chosen objects are dropped.
+        # Legacy enacts size-descending — the smallest chosen go last,
+        # which under multi-resolution refinement are exactly the fine
+        # hot-head chunks — so this flag switches enactment to
+        # benefit-density order (shortfall lands on the coldest chosen
+        # bytes).  Off by default: legacy plans stay bit-identical.
+        self.enact_consistent = enact_consistent
 
     # ------------------------------------------------------------------ util
     def _profile(self, profiler: PhaseProfiler, phase: int, obj: str):
@@ -497,10 +508,18 @@ class Planner:
             if o in residents:
                 # already resident: keeping it costs nothing
                 items.append(knapsack.Item(o, bft, size(o)))
-                meta[o] = dict(cost=0.0, extra=0.0, resident=True)
+                meta[o] = dict(cost=0.0, extra=0.0, resident=True, bft=bft)
                 continue
             overlap = windows[o][1]
             cost = perfmodel.movement_cost(size(o), self.machine, overlap)
+            if self.enact_consistent:
+                # churn guard: an overlappable copy still spends real copy
+                # bandwidth and leaves the chunk in flight (slow-tier
+                # service until it lands) — price every fetch at least its
+                # full-bandwidth copy time.  Without this, fine chunks'
+                # overlap windows zero their cost and the solve swaps
+                # near-equal sub-chunks every phase for no realized gain.
+                cost = max(cost, size(o) / self.machine.copy_bw)
             extra = 0.0
             deficit = size(o) - free
             if deficit > 0:
@@ -519,9 +538,23 @@ class Planner:
 
         chosen = set(self._solve(items, self.capacity))
 
+        # Enactment order decides which chosen objects lose out when the
+        # knapsack's selection cannot fully materialize (it may decline a
+        # referenced resident — e.g. a phase's working buffer — that the
+        # mover can never actually evict, leaving less room than the solve
+        # assumed).  The legacy order is size-descending, which enacts the
+        # *smallest* chosen last — under multi-resolution refinement those
+        # are exactly the fine hot-head chunks, so ``enact_consistent``
+        # switches to benefit-density order: any shortfall then drops the
+        # coldest chosen bytes instead of the hottest.
+        if self.enact_consistent:
+            order = sorted(chosen, key=lambda o: (
+                -meta[o].get("bft", 0.0) / max(size(o), 1), o))
+        else:
+            order = sorted(chosen, key=lambda o: (-size(o), o))
         moves: List[MoveOp] = []
         # Enact: move chosen non-residents in, evicting just enough.
-        for o in sorted(chosen, key=lambda o: (-size(o), o)):
+        for o in order:
             if o in residents:
                 continue
             needed_evict = False

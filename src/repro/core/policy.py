@@ -74,13 +74,15 @@ STAGE_NAMES = ("attribute", "partition", "coalesce", "solve", "schedule")
 @dataclasses.dataclass(frozen=True)
 class StageProvenance:
     """One pipeline stage run: what transformed the state, and against
-    which profile epoch / registry chunk generation it ran."""
+    which profile epoch / registry chunk generation / histogram resolution
+    epoch it ran."""
 
     stage: str
     policy: str
     profile_epoch: int
     chunk_generation: int
     detail: str = ""
+    hist_epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -102,13 +104,17 @@ class PlanProgram(PlacementPlan):
     profile_epoch: int = 0
     chunk_generation: int = 0
     capacity_bytes: int = 0
+    # histogram resolution epoch the build consumed: bumped whenever any
+    # measured histogram is adaptively re-binned, so a program records
+    # which profiling resolution produced its decisions
+    hist_epoch: int = 0
 
     # ------------------------------------------------------------ construction
     @classmethod
     def from_plan(cls, plan: PlacementPlan, *, policy: str,
                   provenance: Sequence[StageProvenance],
                   profile_epoch: int, chunk_generation: int,
-                  capacity_bytes: int,
+                  capacity_bytes: int, hist_epoch: int = 0,
                   phase_decisions: Optional[Sequence[PhaseDecision]] = None,
                   global_contribs: Optional[Sequence[GlobalContrib]] = None,
                   graph_digest: Optional[tuple] = None) -> "PlanProgram":
@@ -128,7 +134,7 @@ class PlanProgram(PlacementPlan):
                           else plan.graph_digest),
             policy=policy, provenance=list(provenance),
             profile_epoch=profile_epoch, chunk_generation=chunk_generation,
-            capacity_bytes=capacity_bytes)
+            capacity_bytes=capacity_bytes, hist_epoch=hist_epoch)
 
     # ----------------------------------------------------------- serialization
     def to_dict(self) -> Dict[str, Any]:
@@ -159,7 +165,8 @@ class PlanProgram(PlacementPlan):
             provenance=[dataclasses.asdict(p) for p in self.provenance],
             profile_epoch=self.profile_epoch,
             chunk_generation=self.chunk_generation,
-            capacity_bytes=self.capacity_bytes)
+            capacity_bytes=self.capacity_bytes,
+            hist_epoch=self.hist_epoch)
 
     def to_json(self, **kw: Any) -> str:
         return json.dumps(self.to_dict(), **kw)
@@ -202,7 +209,8 @@ class PlanProgram(PlacementPlan):
             provenance=[StageProvenance(**p) for p in d["provenance"]],
             profile_epoch=d["profile_epoch"],
             chunk_generation=d["chunk_generation"],
-            capacity_bytes=d["capacity_bytes"])
+            capacity_bytes=d["capacity_bytes"],
+            hist_epoch=d.get("hist_epoch", 0))
 
     @classmethod
     def from_json(cls, s: str) -> "PlanProgram":
@@ -246,7 +254,8 @@ class PipelineState:
         self.provenance.append(StageProvenance(
             stage=stage, policy=policy,
             profile_epoch=self.profiler.epoch,
-            chunk_generation=self.registry.generation, detail=detail))
+            chunk_generation=self.registry.generation, detail=detail,
+            hist_epoch=getattr(self.profiler, "hist_epoch", 0)))
 
     def _cfg(self, name: str, default: Any) -> Any:
         return getattr(self.config, name, default)
@@ -265,14 +274,20 @@ def stage_attribute(state: PipelineState, policy: str = "unimem") -> None:
 
 def stage_partition(state: PipelineState, policy: str = "unimem") -> None:
     """Split oversized chunkable objects (skew-aware when histograms are
-    measured) and re-attribute per-phase references to chunks."""
+    measured) and re-attribute per-phase references to chunks.  In
+    multi-resolution mode (``histogram_refine``), additionally re-split
+    existing chunks whose refined histograms resolved sub-chunk imbalance
+    — the pass that lets a coalesced chunk re-split when drift re-heats
+    it."""
     if not state._cfg("enable_partitioning", True):
         return
+    multi_res = state._cfg("histogram_refine", False)
     newly = partition_mod.auto_partition(
         state.registry, state.graph, state.capacity,
         profiler=state.profiler,
         skew_aware=state._cfg("chunk_aware", True),
-        leaf_aligned=state._cfg("leaf_aligned", False))
+        leaf_aligned=state._cfg("leaf_aligned", False),
+        multi_res=multi_res)
     if not newly:
         # Replan with parents partitioned on an earlier build: the
         # attribute stage just rewrote parent-name refs from the
@@ -282,8 +297,16 @@ def stage_partition(state: PipelineState, policy: str = "unimem") -> None:
         # histograms and size fractions apply.)
         partition_mod.resplit_refs(state.graph, state.registry,
                                    state.profiler)
-    state.record(policy, "partition",
-                 f"split {len(newly)}" if newly else "re-attributed")
+    resplits = {}
+    if multi_res and state._cfg("chunk_aware", True):
+        resplits = partition_mod.resplit_hot_chunks(
+            state.registry, state.graph, state.profiler, state.capacity,
+            leaf_aligned=state._cfg("leaf_aligned", False))
+    detail = f"split {len(newly)}" if newly else "re-attributed"
+    if resplits:
+        detail += "; resplit " + ";".join(
+            f"{p}:{b}->{a}" for p, (b, a) in sorted(resplits.items()))
+    state.record(policy, "partition", detail)
 
 
 def stage_coalesce(state: PipelineState, policy: str = "unimem") -> None:
@@ -356,6 +379,57 @@ def stage_solve(state: PipelineState, policy: str = "unimem") -> None:
     state.record(policy, "solve", detail)
 
 
+def stage_solve_lru(state: PipelineState, policy: str = "lru") -> None:
+    """Clock/LRU baseline solve (ablation plugin): walk the phases in
+    order; every object a phase references is touched (most recently
+    used) and demand-fetched at that phase's own boundary — no lookahead
+    window, so the fence pays the whole copy; to make room, the
+    least-recently-used resident the phase does not reference is evicted.
+    No Eq. (1)-(5) benefit model is consulted, which is exactly what the
+    ablation measures."""
+    graph, reg = state.graph, state.registry
+    cap = state.planner.capacity
+    size = lambda o: reg[o].size_bytes
+    residents = {o.name for o in reg if o.tier == "fast"}
+    resident_bytes = sum(size(o) for o in residents)
+    last_use: Dict[str, int] = {}
+    clock = 0
+    moves: List[MoveOp] = []
+    placements: List[set] = []
+    for ph in graph:
+        refs = [o for o in ph.refs if o in reg and ph.refs[o] > 0.0]
+        # hotter references first: when not everything fits, the LRU
+        # baseline still serves the phase's heaviest objects
+        for o in sorted(refs, key=lambda o: (-ph.refs[o], o)):
+            clock += 1
+            last_use[o] = clock
+            if o in residents or reg[o].pinned:
+                continue
+            sz = size(o)
+            if sz > cap:
+                continue
+            while resident_bytes + sz > cap:
+                victims = [r for r in residents
+                           if r not in ph.refs and not reg[r].pinned]
+                if not victims:
+                    break
+                v = min(victims, key=lambda r: (last_use.get(r, 0), r))
+                residents.discard(v)
+                resident_bytes -= size(v)
+                moves.append(MoveOp(v, "slow", ph.index, ph.index, size(v),
+                                    size(v) / state.machine.copy_bw))
+            if resident_bytes + sz <= cap:
+                residents.add(o)
+                resident_bytes += sz
+                moves.append(MoveOp(o, "fast", ph.index, ph.index, sz,
+                                    sz / state.machine.copy_bw))
+        placements.append(set(residents))
+    state.plan = PlacementPlan(
+        "lru", placements, moves, graph.iteration_time(),
+        graph.iteration_time())
+    state.record(policy, "solve", f"lru: {len(moves)} moves")
+
+
 def stage_schedule(state: PipelineState, policy: str = "unimem") -> None:
     """Annotate every move with its copy window, duration and slack — the
     schedule the slack-aware mover releases most-urgent-first.  The
@@ -404,9 +478,24 @@ class UnimemPolicy:
             profile_epoch=state.profiler.epoch,
             chunk_generation=state.registry.generation,
             capacity_bytes=state.planner.capacity,
+            hist_epoch=getattr(state.profiler, "hist_epoch", 0),
             phase_decisions=state.local_decisions,
             global_contribs=state.global_contribs,
             graph_digest=state.graph_digest)
+
+
+class LruPolicy(UnimemPolicy):
+    """Clock/LRU baseline for ablations: the solve stage is replaced by a
+    demand-driven recency policy (fetch what the phase touches, evict the
+    least-recently-used resident to make room, no benefit model, no
+    lookahead triggers), while the characterization stages — attribute,
+    partition, coalesce — and the schedule stage are reused unchanged.
+    Quantifies how much of Unimem's win comes from the Eq. (1)-(5) solve
+    rather than from chunking/attribution alone."""
+
+    name = "lru"
+    stages = (stage_attribute, stage_partition, stage_coalesce,
+              stage_solve_lru, stage_schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -440,3 +529,4 @@ def make_policy(name: str, **options: Any) -> PlacementPolicy:
 
 
 register_policy("unimem", lambda **_: UnimemPolicy())
+register_policy("lru", lambda **_: LruPolicy())

@@ -19,12 +19,26 @@ A deterministic seeded RNG injects the sampling noise.
 granularity: when the instrumentation reports how an object's accesses
 distribute over its byte range (``PhaseTraceEvent.access_bins`` — the
 address histogram a PEBS sample stream would produce), each sample that hit
-the object also "records an address", i.e. lands in one of B equal-width
-bins.  The profiler draws those bin hits from a seeded multinomial over the
-true distribution, so the measured histogram carries realistic sampling
-noise that shrinks as more samples accumulate.  Downstream, the skew-aware
-partitioner (``partition.skew_boundaries``) and the planner's chunk
-fallback read the measured histogram instead of assuming uniform density.
+the object also "records an address", i.e. lands in one of the measured
+histogram's bins.  The profiler draws those bin hits from a seeded
+multinomial over the true distribution, so the measured histogram carries
+realistic sampling noise that shrinks as more samples accumulate.
+Downstream, the skew-aware partitioner (``partition.skew_boundaries``) and
+the planner's chunk fallback read the measured histogram instead of
+assuming uniform density.
+
+**Multi-resolution histograms**: the measured histogram is a
+:class:`~.histogram.Histogram` — variable-width bins over the object's
+byte range under a total bin budget (``hist_bins``; ``None`` keeps the
+instrumentation's native uniform resolution, the legacy fixed-width
+behavior, bit-identical plans included).  With ``hist_refine``,
+:meth:`PhaseProfiler.refine_histograms` adaptively re-bins between
+profiling iterations: hot bins split finer, cold bins coarsen to pay for
+it, and the *next* iteration's sampled addresses land in the refined bins
+— so resolution concentrates where the mass is without growing the
+budget.  Every resolution change bumps the phase's profile version and
+the profiler-wide ``hist_epoch``, which join the planner's phase
+fingerprints / plan provenance so scoped replanning stays provably equal.
 
 **Accumulation** is a running (weighted) mean: observing the same
 (phase, object) across ``profile_iterations > 1`` iterations folds each new
@@ -38,10 +52,11 @@ without throwing the old plan away.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .histogram import Histogram
 from .phase import PhaseGraph, PhaseTraceEvent
 from .tiers import MachineProfile
 
@@ -56,10 +71,10 @@ class ObjectPhaseProfile:
 
     Values are running means over every folded observation (``weight``
     observations so far, possibly fractional after :meth:`PhaseProfiler.decay`).
-    ``bin_counts`` accumulates sampled address->bin hits across observations;
-    ``bin_weights`` is the normalized histogram (None when the object was
-    never observed with per-chunk attribution).
-    """
+    ``bin_counts`` accumulates sampled address->bin hits across observations
+    as a (possibly multi-resolution) :class:`~.histogram.Histogram`;
+    ``bin_weights`` exposes the same histogram when it carries mass (None
+    when the object was never observed with per-chunk attribution)."""
 
     phase_index: int
     obj: str
@@ -68,7 +83,7 @@ class ObjectPhaseProfile:
     samples_with_access: float  # #samples_with_data_accesses
     phase_time: float           # seconds
     cacheline_bytes: float = 64.0   # machine.cacheline_bytes at observation
-    bin_counts: Optional[np.ndarray] = None
+    bin_counts: Optional[Histogram] = None
     weight: float = 1.0         # observations folded into the running means
 
     @property
@@ -78,38 +93,51 @@ class ObjectPhaseProfile:
         return self.data_access * self.cacheline_bytes
 
     @property
-    def bin_weights(self) -> Optional[np.ndarray]:
-        """Normalized measured access histogram over the object's byte range,
-        or None when no per-chunk attribution was ever observed."""
-        if self.bin_counts is None:
+    def bin_weights(self) -> Optional[Histogram]:
+        """Measured access histogram over the object's byte range
+        (mass-carrying), or None when no per-chunk attribution was ever
+        observed.  Downstream integrates it with ``partition.bin_mass`` /
+        :meth:`Histogram.mass_fraction` — the bins may be variable-width."""
+        if self.bin_counts is None or self.bin_counts.total <= 0.0:
             return None
-        total = float(self.bin_counts.sum())
-        if total <= 0.0:
-            return None
-        return self.bin_counts / total
+        return self.bin_counts
 
 
 class PhaseProfiler:
     """Builds per-(phase, object) profiles from raw phase trace events."""
 
     def __init__(self, machine: MachineProfile, *, seed: int = 0,
-                 noise: float = 0.05):
+                 noise: float = 0.05, hist_bins: Optional[int] = None,
+                 hist_refine: bool = False):
         self.machine = machine
         self.noise = noise
+        #: measured-histogram bin budget: None accumulates at the
+        #: instrumentation's native uniform resolution (legacy behavior);
+        #: an int projects every observation onto that many bins
+        self.hist_bins = hist_bins
+        #: whether refine_histograms should adapt bin edges (the session
+        #: calls it between profiling iterations when enabled)
+        self.hist_refine = hist_refine
         #: profile epoch: bumped whenever accumulated history is decayed or
         #: cleared — plan provenance records which epoch produced a decision
         self.epoch = 0
+        #: histogram resolution epoch: bumped whenever any measured
+        #: histogram's bin edges change (plan provenance)
+        self.hist_epoch = 0
         self._rng = np.random.default_rng(seed)
         # accumulated observations: (phase, obj) -> running-mean profile
         self._acc: Dict[int, Dict[str, ObjectPhaseProfile]] = {}
         # phase -> (running mean time, accumulated weight)
         self._times: Dict[int, List[float]] = {}
         # phase -> observation counter: bumped on every mutation of that
-        # phase's accumulated state.  (epoch, phase_version) identifies a
-        # phase's profile state exactly, so the scoped replanner can prove
-        # "this phase's solve inputs did not change" without recomputing
-        # benefits (see planner.PhaseDecision).
+        # phase's accumulated state.  (epoch, phase_version, resolution)
+        # identifies a phase's profile state exactly, so the scoped
+        # replanner can prove "this phase's solve inputs did not change"
+        # without recomputing benefits (see planner.PhaseDecision).
         self._versions: Dict[int, int] = {}
+        # phase -> histogram resolution counter: bumped when any of the
+        # phase's measured histograms is re-binned
+        self._hist_res: Dict[int, int] = {}
 
     # -- ingestion -----------------------------------------------------------
     def observe(self, ev: PhaseTraceEvent) -> None:
@@ -148,10 +176,12 @@ class PhaseProfiler:
             observed = true_access * jitter
             hit_frac = min(1.0, share * jitter)
             swa = max(hit_frac * n_samples, 1.0)
-            counts = None
-            if ev.access_bins is not None and obj in ev.access_bins:
-                counts = self._sample_bins(ev.access_bins[obj], swa)
             prev = prof_map.get(obj)
+            counts: Optional[Histogram] = None
+            if ev.access_bins is not None and obj in ev.access_bins:
+                counts = self._sample_bins(
+                    ev.access_bins[obj], swa,
+                    prev.bin_counts if prev is not None else None)
             if prev is None:
                 prof_map[obj] = ObjectPhaseProfile(
                     phase_index=ev.phase_index, obj=obj,
@@ -171,8 +201,8 @@ class PhaseProfiler:
                 if counts is not None:
                     if prev.bin_counts is None:
                         prev.bin_counts = counts
-                    elif len(prev.bin_counts) == len(counts):
-                        prev.bin_counts = prev.bin_counts + counts
+                    elif prev.bin_counts.same_edges(counts):
+                        prev.bin_counts = prev.bin_counts.add(counts)
                     else:       # instrumentation changed its bin resolution
                         prev.bin_counts = counts
         # An execution where a previously-profiled object had *no* accesses
@@ -189,19 +219,50 @@ class PhaseProfiler:
             prev.phase_time += (ev.time - prev.phase_time) / w
             prev.weight = w
 
-    def _sample_bins(self, true_weights, swa: float) -> Optional[np.ndarray]:
+    def _native_hist(self, truth) -> Histogram:
+        """Empty histogram at the truth's native resolution."""
+        if isinstance(truth, Histogram):
+            return Histogram(truth.edges, np.zeros(truth.n_bins))
+        n = int(np.asarray(truth, dtype=np.float64).size) or 1
+        return Histogram.uniform(n)
+
+    def _target_hist(self, truth, prev: Optional[Histogram]) -> Histogram:
+        """The edge set this observation's sampled addresses land in: the
+        accumulated histogram's (possibly refined) edges when one exists,
+        else the bin budget's uniform grid, else the truth's native
+        resolution.
+
+        Legacy native mode (no bin budget) with an un-refined (uniform)
+        accumulated histogram: a source that changes its native resolution
+        mid-run re-targets to the new resolution, which resets the
+        accumulation (the pre-multi-res behavior — stale coarse edges must
+        not quantize a newly finer truth forever).  Refined histograms
+        keep their adapted edges regardless."""
+        if prev is not None:
+            if self.hist_bins is None and prev.is_uniform:
+                native = self._native_hist(truth)
+                if not prev.same_edges(native):
+                    return native
+            return prev
+        if self.hist_bins is not None:
+            return Histogram.uniform(int(self.hist_bins))
+        return self._native_hist(truth)
+
+    def _sample_bins(self, true_weights, swa: float,
+                     prev: Optional[Histogram]) -> Optional[Histogram]:
         """Sampled address->bin histogram: each sample that hit the object
-        records an address; addresses land in bins proportionally to the true
-        access distribution (the PEBS event stream, with multinomial noise)."""
-        w = np.asarray(true_weights, dtype=np.float64)
-        if w.ndim != 1 or w.size == 0:
-            return None
-        w = np.clip(w, 0.0, None)
-        total = w.sum()
-        if total <= 0.0:
+        records an address; addresses land in the target histogram's bins
+        proportionally to the true access distribution (the PEBS event
+        stream, with multinomial noise).  The target edges are the
+        accumulated histogram's — refined edges keep receiving samples at
+        their own resolution."""
+        target = self._target_hist(true_weights, prev)
+        p = target.project(true_weights)
+        if p is None:
             return None
         draws = int(min(max(swa, 8.0), MAX_BIN_DRAWS))
-        return self._rng.multinomial(draws, w / total).astype(np.float64)
+        counts = self._rng.multinomial(draws, p).astype(np.float64)
+        return Histogram(target.edges, counts)
 
     def observe_iteration(self, events: Iterable[PhaseTraceEvent]) -> None:
         for ev in events:
@@ -218,15 +279,18 @@ class PhaseProfiler:
         tm = self._times.get(phase_index)
         return float(tm[0]) if tm else 0.0
 
-    def phase_version(self, phase_index: int) -> Tuple[int, int]:
-        """(epoch, observation counter) — identifies this phase's
-        accumulated profile state exactly (scoped-replan reuse key)."""
-        return (self.epoch, self._versions.get(phase_index, 0))
+    def phase_version(self, phase_index: int) -> Tuple[int, int, int]:
+        """(epoch, observation counter, histogram resolution counter) —
+        identifies this phase's accumulated profile state, including its
+        measured histograms' bin edges, exactly (scoped-replan reuse
+        key)."""
+        return (self.epoch, self._versions.get(phase_index, 0),
+                self._hist_res.get(phase_index, 0))
 
-    def object_bins(self, obj: str) -> Dict[int, np.ndarray]:
+    def object_bins(self, obj: str) -> Dict[int, Histogram]:
         """Measured per-phase access histograms for ``obj`` (phases where the
         object was observed with per-chunk attribution only)."""
-        out: Dict[int, np.ndarray] = {}
+        out: Dict[int, Histogram] = {}
         for phase_index, prof_map in self._acc.items():
             p = prof_map.get(obj)
             if p is not None:
@@ -253,18 +317,23 @@ class PhaseProfiler:
                     p.refs.pop(obj, None)
 
     def decay(self, factor: float = 0.25,
-              phases: Optional[Sequence[int]] = None) -> None:
+              phases: Optional[Union[int, Sequence[int]]] = None) -> None:
         """Down-weight accumulated history so subsequent observations dominate
         the running means (incremental replanning: reuse the old profiles as a
         prior instead of throwing them away).
 
-        ``phases`` restricts the decay to the given phase indices — the
-        scoped drift response: only the drifted phases' histories are
-        down-weighted and re-observed, so every other phase's profile state
-        stays bitwise identical and its standing plan decision remains
-        provably reusable."""
+        ``phases`` restricts the decay to the given phase indices (a bare
+        int is accepted as a single phase) — the scoped drift response:
+        only the drifted phases' histories are down-weighted and
+        re-observed, so every other phase's profile state stays bitwise
+        identical and its standing plan decision remains provably reusable.
+        A phase that was observed zero times (no accumulated state) is a
+        documented **no-op**: there is nothing to decay, nothing raises,
+        and no version advances."""
         if not 0.0 <= factor <= 1.0:
             raise ValueError("decay factor must be in [0, 1]")
+        if phases is not None and isinstance(phases, int):
+            phases = [phases]
         scope = None if phases is None else set(phases)
         if scope is None:
             self.epoch += 1
@@ -277,14 +346,69 @@ class PhaseProfiler:
             for p in prof_map.values():
                 p.weight *= factor
                 if p.bin_counts is not None:
-                    p.bin_counts = p.bin_counts * factor
+                    p.bin_counts = p.bin_counts.scaled(factor)
         for phase_index, tm in self._times.items():
             if scope is not None and phase_index not in scope:
                 continue
             tm[1] *= factor
 
+    def refine_histograms(self, budget: Optional[int] = None,
+                          phases: Optional[Sequence[int]] = None,
+                          *, min_width: Optional[float] = None,
+                          decay: float = 0.25) -> List[int]:
+        """Adaptively re-bin the accumulated measured histograms: hot bins
+        split finer, cold regions coarsen, total bins stay within
+        ``budget`` (default: the profiler's ``hist_bins``, else 64).  The
+        session calls this *between* profiling iterations so the next
+        iteration's sampled addresses land in the refined bins.
+
+        A split bin hands each half exactly half its mass — the best
+        piecewise-constant guess, but *no information* about the true
+        sub-structure — so a re-binned histogram's accumulated counts are
+        additionally scaled by ``decay``: the next iteration's sampled
+        addresses (drawn at the refined resolution) dominate the running
+        histogram instead of being averaged into the flat-prior residue
+        (which would bias fine-bin masses toward uniform for ~1/weight
+        iterations and mis-rank the hot head's chunks).
+
+        ``phases`` scopes the refinement (the scoped drift response: a
+        phase outside the scope keeps its bin edges — and therefore its
+        profile version — bitwise intact, so its standing plan decision
+        stays reusable).  Phases observed zero times are no-ops.  Returns
+        the phase indices whose resolution changed; any change bumps the
+        profiler-wide ``hist_epoch`` (plan provenance)."""
+        budget = int(budget if budget is not None
+                     else (self.hist_bins or 64))
+        min_width = (min_width if min_width is not None
+                     else 1.0 / (16 * budget))
+        scope = None if phases is None else set(phases)
+        changed: List[int] = []
+        for phase_index in sorted(self._acc):
+            if scope is not None and phase_index not in scope:
+                continue
+            ph_changed = False
+            for p in self._acc[phase_index].values():
+                h = p.bin_counts
+                if h is None or h.total <= 0.0:
+                    continue
+                h2 = h.refined(budget, min_width=min_width)
+                if h2 is not h:     # refined() returns self when unchanged
+                    p.bin_counts = h2.scaled(decay)
+                    ph_changed = True
+            if ph_changed:
+                self._hist_res[phase_index] = \
+                    self._hist_res.get(phase_index, 0) + 1
+                self._versions[phase_index] = \
+                    self._versions.get(phase_index, 0) + 1
+                changed.append(phase_index)
+        if changed:
+            self.hist_epoch += 1
+        return changed
+
     def clear(self) -> None:
         self.epoch += 1
+        self.hist_epoch += 1
         self._versions.clear()
+        self._hist_res.clear()
         self._acc.clear()
         self._times.clear()

@@ -103,6 +103,24 @@ class RuntimeConfig:
     # Snap partition cuts to registered pytree leaf boundaries so chunks
     # are moveable as whole arrays on real backends (no sub-leaf copies).
     leaf_aligned: bool = False
+    # Multi-resolution profiling histograms (core/histogram.py): total bin
+    # budget per measured (phase, object) histogram.  None accumulates at
+    # the instrumentation's native uniform resolution — the legacy
+    # fixed-width behavior, bit-identical plans included.
+    histogram_bins: Optional[int] = None
+    # Adaptive refinement: between profiling iterations, hot bins re-bin
+    # finer (down to the budget's min width) while cold regions coarsen to
+    # pay for it, so the next iteration's samples resolve the hot head —
+    # and the partitioner may cut hot-head chunks below the legacy one-bin
+    # ceiling (re-splitting previously coalesced chunks when drift
+    # re-heats them).  Off by default: plans stay bit-identical to the
+    # fixed-width pipeline.
+    histogram_refine: bool = False
+    # Per-channel priorities for the simulated multi-channel copy engine
+    # (e.g. [0, 1] reserves channel 1 for urgent fetches: bulk demotion
+    # evictions may only use the minimum-priority channels and can never
+    # head-of-line-block a fetch).  None = all channels equal (legacy).
+    copy_channel_priorities: Optional[Sequence[int]] = None
 
 
 @dataclasses.dataclass
@@ -131,14 +149,20 @@ class Session:
         self.backend = backend if backend is not None else \
             backends_mod.make_backend(
                 self.config.backend, machine,
-                mover=self.config.mover, channels=self.config.copy_channels)
+                mover=self.config.mover, channels=self.config.copy_channels,
+                priorities=self.config.copy_channel_priorities)
         self.cf = cf or CalibrationConstants()
         self.capacity = (self.config.fast_capacity_bytes
                          if self.config.fast_capacity_bytes is not None
                          else machine.fast.capacity_bytes)
-        self.profiler = PhaseProfiler(machine, seed=self.config.seed)
+        self.profiler = PhaseProfiler(
+            machine, seed=self.config.seed,
+            hist_bins=self.config.histogram_bins,
+            hist_refine=self.config.histogram_refine)
         self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
-        self.planner = Planner(machine, self.registry, self.cf, self.capacity)
+        self.planner = Planner(
+            machine, self.registry, self.cf, self.capacity,
+            enact_consistent=self.config.histogram_refine)
         self.policy = policy_mod.make_policy(self.config.policy)
         self.mover: Optional[ProactiveMover] = None
         self.plan: Optional[PlacementPlan] = None
@@ -440,6 +464,19 @@ class Session:
                 self._build_plan()
                 self._profiling = False
                 self._profiled_iters = 0
+            elif self.config.histogram_refine:
+                # Multi-resolution refinement between profiling iterations
+                # (never after the last: a split without a subsequent
+                # observation carries no new information): the next
+                # iteration's sampled addresses land in the refined bins,
+                # so the hot head resolves finer at the same bin budget.
+                # Scoped to the drifted phases during a scoped drift
+                # response, so every other phase's profile state — and its
+                # standing plan decision — stays bitwise intact.
+                self.profiler.refine_histograms(
+                    self.config.histogram_bins,
+                    phases=(sorted(self._drift_scope)
+                            if self._drift_scope is not None else None))
         elif self._baseline_pending and self._events_this_iter:
             # variable phase sets: if the baseline iteration did not reach
             # the last registered phase, close the baseline window here
@@ -501,6 +538,14 @@ class Session:
             self.profiler.decay(
                 self.config.replan_decay,
                 phases=sorted(scope) if scope is not None else None)
+            if self.config.histogram_refine:
+                # refine before the re-profiling window opens so the
+                # re-observed iterations sample into the adapted bins (a
+                # re-heated region's bins split; the re-split pass can
+                # then cut below the old coarse ceiling at rebuild)
+                self.profiler.refine_histograms(
+                    self.config.histogram_bins,
+                    phases=sorted(scope) if scope is not None else None)
             self._profiling = True
             self._profiled_iters = 0
         else:

@@ -228,7 +228,9 @@ class SimulationEngine:
             backend = make_backend(
                 "sim", machine, now_fn=lambda: self.clock,
                 mover=runtime.config.mover,
-                channels=runtime.config.copy_channels)
+                channels=runtime.config.copy_channels,
+                priorities=getattr(runtime.config,
+                                   "copy_channel_priorities", None))
             self.runtime.backend = backend
             if self.runtime.mover is not None:
                 self.runtime.mover.backend = backend

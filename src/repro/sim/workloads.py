@@ -380,7 +380,7 @@ def graph_chase(scale: float = 1.0) -> SimWorkload:
 
 
 def graph_chase_skewed(scale: float = 1.0, alpha: float = 1.3,
-                       seed: int = 7) -> SimWorkload:
+                       seed: int = 7, density_bins: int = 64) -> SimWorkload:
     """Power-law graph analytics over two oversized adjacency shards.
 
     Each 640 MB shard's gather traffic follows a permuted power-law density
@@ -390,7 +390,14 @@ def graph_chase_skewed(scale: float = 1.0, alpha: float = 1.3,
     the planner cycles whole shards through the fast tier; with measured
     per-chunk attribution, skew-aware bisection isolates the hot regions
     and the knapsack keeps exactly them resident, cutting migration traffic
-    and steady-state time."""
+    and steady-state time.
+
+    ``density_bins`` sets the *true* density's native resolution.  Above
+    the profiler's bin budget (64 by default) the truth carries structure
+    a fixed-width measured histogram cannot resolve — the regime where
+    adaptive multi-resolution refinement (``RuntimeConfig.
+    histogram_refine``) pays: hot-head bins refine below one legacy bin
+    while the cold tail coarsens."""
     s = scale
     objects = {
         "frontier": int(16 * MB * s),
@@ -399,8 +406,8 @@ def graph_chase_skewed(scale: float = 1.0, alpha: float = 1.3,
         "adjB": int(640 * MB * s),
     }
     o = objects
-    dens_a = power_law_density(64, alpha, seed=seed)
-    dens_b = power_law_density(64, alpha, seed=seed + 1)
+    dens_a = power_law_density(density_bins, alpha, seed=seed)
+    dens_b = power_law_density(density_bins, alpha, seed=seed + 1)
     phases = [
         SimPhaseSpec("gatherA", 0.020, {
             "adjA": _acc(o["adjA"], 3.0, 0.85, density=dens_a),
@@ -420,7 +427,8 @@ def graph_chase_skewed(scale: float = 1.0, alpha: float = 1.3,
 
 
 def kv_serving_skewed(scale: float = 1.0, n_blocks: int = 12,
-                      n_phases: int = 12, window: int = 3) -> SimWorkload:
+                      n_phases: int = 12, window: int = 3,
+                      sub: int = 1, taper: float = 0.62) -> SimWorkload:
     """KV-cache serving with the cache as two monolithic chunkable rings.
 
     Same access anatomy as :func:`kv_serving`, but the keys and values are
@@ -432,12 +440,34 @@ def kv_serving_skewed(scale: float = 1.0, n_blocks: int = 12,
     equal chunk looks identically warm and the planner cannot place the
     window; with it, skew-aware bisection cuts the ring along the measured
     per-phase density edges and the local search prefetches exactly the
-    window chunks."""
+    window chunks.
+
+    ``sub > 1`` resolves the true density *within* each block at ``sub``
+    sub-bins: a hot block's mass tapers geometrically (``taper``) from its
+    head — the recent-token gradient inside a block — so the truth carries
+    structure finer than one block.  A fixed-width measured histogram at
+    block granularity smears it; adaptive multi-resolution refinement
+    resolves the intra-block head and lets hot chunks shrink below one
+    legacy bin."""
     s = scale
     blk = int(24 * MB * s)
     cache = blk * n_blocks
     objects: Dict[str, int] = {"w": int(96 * MB * s),
                                "kcache": cache, "vcache": cache}
+
+    def expand(weights: List[float]) -> List[float]:
+        if sub <= 1:
+            return list(weights)
+        g = [taper ** k for k in range(sub)]
+        gs = sum(g)
+        out: List[float] = []
+        for w in weights:
+            if w >= 1.0:        # hot block: recent-token head gradient
+                out.extend(w * sub * gk / gs for gk in g)
+            else:               # deep history / cold: flat within the block
+                out.extend(w for _ in range(sub))
+        return out
+
     phases: List[SimPhaseSpec] = []
     for p in range(n_phases):
         weights = [0.0] * n_blocks
@@ -450,12 +480,13 @@ def kv_serving_skewed(scale: float = 1.0, n_blocks: int = 12,
                 weights[b] = 0.1
         total_passes = sum(weights)
         acc = total_passes * blk / LINE
+        dens = expand(weights)
         touches: Dict[str, SimObjectAccess] = {
             "w": _acc(objects["w"], 1.0, 1.0),
             "kcache": SimObjectAccess(accesses=acc, stream_fraction=1.0,
-                                      density=list(weights)),
+                                      density=dens),
             "vcache": SimObjectAccess(accesses=acc, stream_fraction=1.0,
-                                      density=list(weights)),
+                                      density=list(dens)),
         }
         phases.append(SimPhaseSpec(f"decode{p}", 0.008, touches))
     return SimWorkload("kv_serving_skew", phases, objects,

@@ -1,0 +1,457 @@
+"""Multi-resolution histogram invariants (PR 5).
+
+Covers the ISSUE-5 test checklist:
+
+* mass conservation under refine / coarsen / decay round-trips;
+* legacy-uniform parity: uniform histograms integrate bit-identically to
+  the fixed-width ``bin_mass`` arithmetic, and with refinement off the
+  end-to-end plans are bit-identical to the PR 4 pipeline (cross-PR
+  golden digests captured from the pre-multi-res code);
+* re-split-after-coalesce regression: a merged chunk re-splits below the
+  old coarse ceiling when drift re-heats it;
+* scoped-vs-full replan equality with a histogram-resolution drift inside
+  the scope;
+* the multi-res payoff: refined runs reach equal-or-better steady slack
+  with hot-head chunks finer than one legacy bin at the same bin budget;
+* ``profiler.decay(phases=...)`` on never-observed phases is a documented
+  no-op.
+"""
+
+import hashlib
+import json
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # pragma: no cover - fallback shim
+    from _propcheck import st, given, settings
+
+from repro.core import (PAPER_DRAM_NVM, Histogram, PhaseProfiler,
+                        RuntimeConfig, UnimemRuntime, build_phase_graph,
+                        calibrate, uniform_mass)
+from repro.core.data_objects import DataObject, ObjectRegistry
+from repro.core.partition import (auto_partition, bin_mass, chunk_spans,
+                                  coalesce_chunks, resplit_hot_chunks,
+                                  resplit_refs, skew_boundaries)
+from repro.core.phase import PhaseTraceEvent
+from repro.sim import SimulationEngine
+from repro.sim.workloads import (graph_chase_skewed, kv_serving_skewed,
+                                 power_law_density)
+
+MB = 1024 ** 2
+M = PAPER_DRAM_NVM
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# mass conservation: refine / coarsen / decay round-trips
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 200))
+@settings(max_examples=40, deadline=None)
+def test_refine_coarsen_decay_conserve_mass(seed):
+    rng = _rng(seed)
+    n = int(rng.integers(4, 257))
+    h = Histogram.uniform(n, rng.random(n) ** 3 * 100.0)
+    total = h.total
+    budget = int(rng.integers(2, 129))
+    for _ in range(4):                          # repeated refinement rounds
+        h = h.refined(budget, min_width=1.0 / 4096)
+        assert h.n_bins <= max(budget, 1) or h.n_bins <= n
+        assert h.total == pytest.approx(total, rel=1e-9)
+        assert h.edges[0] == 0.0 and h.edges[-1] == 1.0
+        assert np.all(np.diff(h.edges) > 0.0)
+    factor = float(rng.uniform(0.0, 1.0))
+    h2 = h.scaled(factor)
+    assert h2.total == pytest.approx(total * factor, rel=1e-9)
+    assert h2.same_edges(h)                     # decay never moves edges
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_rebinned_conserves_mass_and_partition_sums_to_one(seed):
+    rng = _rng(seed)
+    n = int(rng.integers(2, 65))
+    h = Histogram.uniform(n, rng.random(n) * 10.0)
+    cuts = np.sort(rng.random(int(rng.integers(1, 12))))
+    edges = np.concatenate([[0.0], np.unique(cuts), [1.0]])
+    h2 = h.rebinned(edges)
+    assert h2.total == pytest.approx(h.total, rel=1e-9)
+    # any partition of [0, 1] integrates to the full mass
+    masses = [h.mass_fraction(lo, hi) for lo, hi in zip(edges[:-1], edges[1:])]
+    assert sum(masses) == pytest.approx(1.0, rel=1e-9)
+
+
+def test_refined_budget_and_fixed_point():
+    w = np.array(power_law_density(256, 1.5))
+    h = Histogram.uniform(256, w * 1e4)
+    r = h.refined(32)
+    assert r.n_bins <= 32
+    # hot head resolved finer than the cold tail
+    assert r.widths[0] < r.widths[-1]
+    # refinement converges: a fixed point is reached, not endless churn
+    prev = r
+    for _ in range(10):
+        nxt = prev.refined(32)
+        if nxt is prev:
+            break
+        prev = nxt
+    assert prev.refined(32) is prev
+
+
+def test_refined_empty_and_degenerate():
+    h = Histogram.uniform(8)
+    assert h.refined(4) is h                    # no mass: nothing to adapt
+    h2 = Histogram.uniform(1, [5.0])
+    assert h2.refined(0) is h2
+
+
+# ---------------------------------------------------------------------------
+# legacy-uniform parity
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 300))
+@settings(max_examples=60, deadline=None)
+def test_uniform_histogram_mass_bitwise_matches_legacy(seed):
+    rng = _rng(seed)
+    n = int(rng.integers(1, 65))
+    counts = rng.random(n) * 50.0
+    h = Histogram.uniform(n, counts)
+    lo, hi = sorted(rng.uniform(-0.1, 1.1, size=2))
+    # the legacy flow normalized the counts (old bin_weights) before
+    # integrating — bitwise equality, not approx
+    t = float(counts.sum())
+    legacy = uniform_mass(counts / t, lo, hi)
+    assert h.mass_fraction(lo, hi) == legacy
+    assert bin_mass(h, lo, hi) == legacy
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_project_native_uniform_is_legacy_probability_vector(seed):
+    rng = _rng(seed)
+    n = int(rng.integers(1, 65))
+    w = rng.random(n)
+    target = Histogram.uniform(n)
+    p = target.project(list(w))
+    wc = np.clip(np.asarray(w, dtype=np.float64), 0.0, None)
+    assert np.array_equal(p, wc / wc.sum())
+
+
+def test_variable_width_mass_fraction_manual():
+    h = Histogram([0.0, 0.25, 0.5, 1.0], [1.0, 1.0, 2.0])
+    assert h.mass_fraction(0.0, 1.0) == pytest.approx(1.0)
+    assert h.mass_fraction(0.0, 0.25) == pytest.approx(0.25)
+    assert h.mass_fraction(0.5, 1.0) == pytest.approx(0.5)
+    assert h.mass_fraction(0.5, 0.75) == pytest.approx(0.25)   # half of bin 3
+    assert h.mass_fraction(0.125, 0.375) == pytest.approx(0.25)
+    assert h.finest_width(0.0, 1.0) == 0.25
+    assert h.finest_width(0.6, 1.0) == 0.5
+
+
+# the PR 4 pipeline's plans, captured from the pre-multi-res code: a
+# canonical digest over (strategy, residents, moves, predicted/baseline
+# times, schedule), the steady virtual-time iteration time, and the final
+# chunk count — refinement off must reproduce all three bit-identically
+PR4_GOLDENS = {
+    "graph_chase_skew": ("25061f969737e506", 1.5490051191497485, 93),
+    "kv_serving_skew": ("72a7b192d1f10eda", 0.9166160486399996, 40),
+}
+
+
+def _plan_digest(plan):
+    d = dict(strategy=plan.strategy,
+             residents=[sorted(r) for r in plan.residents],
+             moves=[(m.obj, m.dst, m.trigger_phase, m.needed_by, m.size_bytes,
+                     m.est_unhidden_cost, m.est_benefit) for m in plan.moves],
+             predicted=plan.predicted_iteration_time,
+             baseline=plan.baseline_iteration_time,
+             schedule=[(s.op.obj, s.window_s, s.duration_s, s.slack_s)
+                       for s in plan.schedule])
+    return hashlib.sha256(json.dumps(d, sort_keys=True).encode()) \
+        .hexdigest()[:16]
+
+
+@pytest.mark.parametrize("name,make", [
+    ("graph_chase_skew", graph_chase_skewed),
+    ("kv_serving_skew", kv_serving_skewed),
+])
+def test_refinement_off_is_bit_identical_to_pr4(name, make):
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+    wl = make()
+    rt = UnimemRuntime(mach, RuntimeConfig(fast_capacity_bytes=256 * MB,
+                                           drift_threshold=10.0),
+                       cf=calibrate(mach))
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    res = SimulationEngine(mach, wl, runtime=rt).run(8)
+    digest, steady, n_chunks = PR4_GOLDENS[name]
+    assert _plan_digest(rt.plan) == digest
+    assert res.steady_iteration_time == steady
+    assert sum(1 for o in rt.registry if o.parent is not None) == n_chunks
+
+
+# ---------------------------------------------------------------------------
+# profiler integration: budgets, refinement epochs, scoped refinement
+# ---------------------------------------------------------------------------
+def test_profiler_budget_projects_native_bins():
+    prof = PhaseProfiler(M, seed=3, hist_bins=16)
+    truth = power_law_density(64, 1.4)          # native finer than budget
+    for _ in range(6):
+        prof.observe(PhaseTraceEvent(0, 0.4, {"a": 1e6},
+                                     access_bins={"a": truth}))
+    h = prof.profile(0, "a").bin_weights
+    assert h is not None and h.n_bins == 16
+    # projected masses still track the true distribution
+    t = Histogram.from_weights(truth)
+    for i in range(16):
+        assert h.mass_fraction(i / 16, (i + 1) / 16) == pytest.approx(
+            t.mass_fraction(i / 16, (i + 1) / 16), abs=0.05)
+
+
+def test_refine_histograms_bumps_versions_and_scopes():
+    prof = PhaseProfiler(M, seed=5, hist_bins=16, hist_refine=True)
+    truth = power_law_density(256, 1.6)
+    for ph in (0, 1):
+        prof.observe(PhaseTraceEvent(ph, 0.4, {"a": 1e7},
+                                     access_bins={"a": truth}))
+    v0, v1 = prof.phase_version(0), prof.phase_version(1)
+    epoch0 = prof.hist_epoch
+    other = prof.profile(1, "a").bin_counts
+    changed = prof.refine_histograms(16, phases=[0])
+    assert changed == [0]
+    assert prof.phase_version(0) != v0           # resolution joins the key
+    assert prof.phase_version(1) == v1           # out of scope: untouched
+    assert prof.profile(1, "a").bin_counts is other
+    assert prof.hist_epoch == epoch0 + 1
+    # next observation accumulates at the refined resolution
+    prof.observe(PhaseTraceEvent(0, 0.4, {"a": 1e7},
+                                 access_bins={"a": truth}))
+    h = prof.profile(0, "a").bin_counts
+    assert not h.is_uniform and h.n_bins <= 16
+
+
+def test_decay_on_unobserved_phase_is_noop():
+    """Regression (ISSUE 5 satellite): decaying a phase observed zero
+    times must be a silent no-op — nothing raises, nothing changes."""
+    prof = PhaseProfiler(M, seed=0)
+    prof.observe(PhaseTraceEvent(0, 0.1, {"a": 500.0}))
+    before = prof.profile(0, "a").weight
+    v = prof.phase_version(0)
+    prof.decay(0.25, phases=[7])                 # never observed
+    prof.decay(0.25, phases=7)                   # bare int accepted
+    prof.decay(0.25, phases=[])                  # empty scope
+    assert prof.profile(0, "a").weight == before
+    assert prof.phase_version(0) == v
+    empty = PhaseProfiler(M, seed=0)
+    empty.decay(0.5, phases=[0, 1, 2])           # nothing accumulated at all
+    assert empty.epoch == 0                      # scoped decay: no new epoch
+
+
+# ---------------------------------------------------------------------------
+# partitioning: local floors, re-split after coalesce
+# ---------------------------------------------------------------------------
+def test_skew_boundaries_local_floor_cuts_below_legacy_bin():
+    size = 640 * MB
+    w = np.zeros(256)
+    w[40] = 100.0                                # one sharp 2.5 MB hot spot
+    w += 0.1
+    refined = Histogram.from_weights(w).refined(64)
+    coarse = 64 * MB
+    legacy = skew_boundaries(size, [Histogram.from_weights(w).rebinned(
+        np.arange(65) / 64)], coarse_bytes=coarse,
+        min_chunk_bytes=max(coarse // 16, 1))
+    mr = skew_boundaries(size, [refined], coarse_bytes=coarse,
+                         min_chunk_bytes=max(coarse // 64, 1),
+                         local_floor=True)
+    legacy_widths = np.diff([0] + legacy)
+    mr_widths = np.diff([0] + mr)
+    legacy_bin = size / 64
+    assert legacy_widths.min() >= legacy_bin     # the old one-bin ceiling
+    assert mr_widths.min() < legacy_bin          # multi-res cuts below it
+    assert sum(mr_widths) == size
+
+
+def _observe_density(prof, phase, obj, weights, n=4, access=1e7):
+    for _ in range(n):
+        prof.observe(PhaseTraceEvent(phase, 0.3, {obj: access},
+                                     access_bins={obj: list(weights)}))
+
+
+def test_merged_chunk_resplits_when_drift_reheats_it():
+    """ISSUE 5 regression: coalesce merges converged-cold chunks; when
+    drift re-heats a region inside the merged chunk, the refined
+    histograms + re-split pass cut it back apart — below the old coarse
+    ceiling — which the pre-multi-res pipeline could never do."""
+    size = 320 * MB
+    cap = 128 * MB
+    reg = ObjectRegistry()
+    reg.alloc("big", size, chunkable=True)
+    graph = build_phase_graph([("p0", {"big": 1e7})], times=[0.3])
+    prof = PhaseProfiler(M, seed=11, hist_bins=64, hist_refine=True)
+
+    # phase 1 of life: hot head, cold tail -> skew partition + coalesce
+    w = np.ones(256) * 0.05
+    w[:32] = 8.0
+    _observe_density(prof, 0, "big", w)
+    prof.annotate_graph(graph)
+    auto_partition(reg, graph, cap, profiler=prof, multi_res=True)
+    coalesce_chunks(reg, graph, prof, cap)
+    spans = chunk_spans(reg, "big")
+    assert len(spans) >= 2
+    tail = spans[-1]
+    tail_width = tail[2] - tail[1]
+    assert tail_width > cap // 8                 # cold tail merged coarse
+
+    # drift: a sharp hot spot re-heats the middle of the merged tail
+    prof.decay(0.05)
+    prof.refine_histograms(64)
+    w2 = np.ones(256) * 0.05
+    mid_bin = int((tail[1] + tail_width // 2) / size * 256)
+    w2[mid_bin] = 50.0
+    _observe_density(prof, 0, "big", w2, n=3)
+    prof.refine_histograms(64)
+    _observe_density(prof, 0, "big", w2, n=3)
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg, prof)
+    total_refs = sum(graph[0].refs.get(c.name, 0.0)
+                     for c, _, _ in chunk_spans(reg, "big"))
+
+    # leaf-aligned mode: re-splitting would cut inside leaves — no-op
+    assert resplit_hot_chunks(reg, graph, prof, cap, leaf_aligned=True) == {}
+    changed = resplit_hot_chunks(reg, graph, prof, cap)
+    assert "big" in changed
+    before, after = changed["big"]
+    assert after > before
+    spans2 = chunk_spans(reg, "big")
+    # the re-heated region is now isolated finer than the merged tail —
+    # and below the legacy one-bin ceiling of the original partition
+    hot_lo = mid_bin / 256 * size
+    hot = [c for c, lo, hi in spans2 if lo <= hot_lo < hi]
+    assert hot and hot[0].size_bytes < tail_width
+    assert min(hi - lo for _, lo, hi in spans2) < size / 64
+    # per-phase references conserved exactly across the re-split
+    total2 = sum(graph[0].refs.get(c.name, 0.0) for c, _, _ in spans2)
+    assert total2 == pytest.approx(total_refs, rel=1e-9)
+    # chunk bytes and indices stay a partition of the parent
+    assert sum(c.size_bytes for c, _, _ in spans2) == size
+    assert [c.chunk_index for c, _, _ in spans2] == list(range(len(spans2)))
+
+
+# ---------------------------------------------------------------------------
+# scoped-vs-full replan equality with resolution drift in scope
+# ---------------------------------------------------------------------------
+def test_scoped_replan_equals_full_under_resolution_drift():
+    from repro.core import CalibrationConstants, Planner
+
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5)
+    reg = ObjectRegistry()
+    n_parents, per = 4, 8
+    for p in range(n_parents):
+        for k in range(per):
+            reg.register(DataObject(name=f"par{p}#{k}", size_bytes=4 * MB,
+                                    parent=f"par{p}", chunk_index=k))
+    refs = [{f"par{p}": 1e6 * (p + 1) for p in range(n_parents)
+             if (p + i) % 2 == 0} for i in range(6)]
+    times = [0.05 + 0.01 * i for i in range(6)]
+    graph = build_phase_graph([(f"ph{i}", r) for i, r in enumerate(refs)],
+                              times=times)
+    prof = PhaseProfiler(mach, seed=2, hist_bins=32, hist_refine=True)
+    truth = power_law_density(128, 1.3, seed=5)
+    for i, r in enumerate(refs):
+        prof.observe(PhaseTraceEvent(i, times[i], dict(r),
+                                     access_bins={o: truth for o in r}))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg, prof)
+    planner = Planner(mach, reg, CalibrationConstants(), 64 * MB,
+                      enact_consistent=True)
+    local = planner.plan_local(graph, prof)
+    glob = planner.plan_global(graph, prof)
+
+    # drift scoped to phase 3 INCLUDING a histogram resolution change
+    prof.decay(0.25, phases=[3])
+    prof.refine_histograms(32, phases=[3])
+    prof.observe(PhaseTraceEvent(3, times[3],
+                                 {o: v * 1.7 for o, v in refs[3].items()},
+                                 access_bins={o: truth for o in refs[3]}))
+    prof.annotate_graph(graph)
+    resplit_refs(graph, reg, prof)
+
+    full = planner.plan(graph, prof)
+    scoped = planner.plan(graph, prof, standing=local.phase_decisions,
+                          standing_global=glob.global_contribs,
+                          standing_digest=local.graph_digest)
+    assert full.moves == scoped.moves
+    assert full.residents == scoped.residents
+    assert full.predicted_iteration_time == scoped.predicted_iteration_time
+    assert full.strategy == scoped.strategy
+    # the resolution change joined the fingerprint: phase 3 re-solved
+    sl = planner.plan_local(graph, prof, standing=local.phase_decisions,
+                            standing_digest=local.graph_digest)
+    assert not sl.phase_decisions[3].reused
+
+
+# ---------------------------------------------------------------------------
+# the multi-res payoff, end to end
+# ---------------------------------------------------------------------------
+def _run_mr(wl, refine):
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+    rt = UnimemRuntime(mach, RuntimeConfig(
+        fast_capacity_bytes=256 * MB, drift_threshold=10.0,
+        chunk_aware=True, histogram_bins=64, profile_iterations=3,
+        histogram_refine=refine, enable_global_search=False),
+        cf=calibrate(mach))
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    res = SimulationEngine(mach, wl, runtime=rt).run(12)
+    return res, rt
+
+
+def test_refined_hot_head_chunks_below_one_legacy_bin_at_equal_slack():
+    wl = graph_chase_skewed(density_bins=256)
+    uni, _ = _run_mr(wl, refine=False)
+    ref, rrt = _run_mr(wl, refine=True)
+    # equal-or-better steady slack at the same total bin budget
+    assert ref.steady_iteration_time <= uni.steady_iteration_time * 1.001
+    # hot-head chunks finer than one legacy (1/64) bin, fast-resident
+    for par in ("adjA", "adjB"):
+        spans = chunk_spans(rrt.registry, par)
+        size = spans[-1][2]
+        fast = [c.size_bytes for c, _, _ in spans if c.tier == "fast"]
+        assert fast and min(fast) < size / 64
+
+
+def test_native_mode_resolution_change_resets_accumulation():
+    """Legacy native mode: a source that raises its attribution
+    resolution mid-run must reset accumulation at the new resolution
+    (the pre-multi-res behavior) — not have the finer truth forever
+    projected onto the stale coarse edges."""
+    prof = PhaseProfiler(M, seed=9)               # hist_bins=None: native
+    coarse = [1.0] * 8
+    for _ in range(3):
+        prof.observe(PhaseTraceEvent(0, 0.2, {"a": 1e6},
+                                     access_bins={"a": coarse}))
+    assert prof.profile(0, "a").bin_counts.n_bins == 8
+    fine = power_law_density(64, 1.5)
+    prof.observe(PhaseTraceEvent(0, 0.2, {"a": 1e6},
+                                 access_bins={"a": fine}))
+    h = prof.profile(0, "a").bin_counts
+    assert h.n_bins == 64                         # reset to the new native
+    # refined (non-uniform) histograms keep their adapted edges instead
+    prof2 = PhaseProfiler(M, seed=9, hist_bins=16, hist_refine=True)
+    for _ in range(2):
+        prof2.observe(PhaseTraceEvent(0, 0.2, {"a": 1e7},
+                                      access_bins={"a": fine}))
+    prof2.refine_histograms(16)
+    edges = prof2.profile(0, "a").bin_counts.edges
+    prof2.observe(PhaseTraceEvent(0, 0.2, {"a": 1e7},
+                                  access_bins={"a": fine}))
+    assert np.array_equal(prof2.profile(0, "a").bin_counts.edges, edges)

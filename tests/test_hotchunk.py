@@ -75,9 +75,9 @@ def test_bin_sampling_tracks_true_density():
     for _ in range(8):
         prof.observe(PhaseTraceEvent(0, 0.5, {"a": 1e6},
                                      access_bins={"a": list(truth)}))
-    w = prof.profile(0, "a").bin_weights
-    assert w is not None and len(w) == 16
-    assert np.abs(w - truth).max() < 0.03    # sampled, but close
+    h = prof.profile(0, "a").bin_weights
+    assert h is not None and len(h) == 16
+    assert np.abs(h.weights - truth).max() < 0.03    # sampled, but close
 
     # decay keeps the estimate but lets fresh observations dominate
     prof.decay(0.1)
@@ -85,8 +85,8 @@ def test_bin_sampling_tracks_true_density():
     for _ in range(8):
         prof.observe(PhaseTraceEvent(0, 0.5, {"a": 1e6},
                                      access_bins={"a": flat}))
-    w2 = prof.profile(0, "a").bin_weights
-    assert np.abs(w2 - 1.0 / 16).max() < 0.05
+    h2 = prof.profile(0, "a").bin_weights
+    assert np.abs(h2.weights - 1.0 / 16).max() < 0.05
 
 
 # ---------------------------------------------------------------------------

@@ -171,7 +171,7 @@ def test_xla_bins_flow_through_hotchunk_pipeline_end_to_end():
     # the profiler's measured histogram is non-uniform (resampled XLA bins)
     bins = rt.profiler.object_bins("table")
     assert bins, "no per-chunk attribution reached the profiler"
-    w = next(iter(bins.values()))
+    w = next(iter(bins.values())).weights
     assert w.max() > 2.0 * w.mean()
     # the table was partitioned along the measured density
     spans = chunk_spans(rt.registry, "table")
@@ -184,3 +184,44 @@ def test_xla_bins_flow_through_hotchunk_pipeline_end_to_end():
     # and the final plan keeps the hot head resident in its phase
     residents = rt.plan.residents[0]
     assert any(c.name in residents for c in hot_chunks)
+
+
+def test_leaf_edge_attribution_is_exact_per_leaf_histogram():
+    """edges="leaf" (ISSUE 5): the source emits a variable-width
+    multi-resolution Histogram with one bin per registered leaf span —
+    exact per-leaf attribution, no grid quantization."""
+    from repro.core import Histogram
+
+    lowered, specs, _ = _lowered()
+    sess = Session(MACHINE)
+    sess.register("table", specs, chunkable=True)
+    src = XlaCostAnalysisSource(sess, edges="leaf")
+    sample = src.bind("step", lowered, ["table", 1])
+    h = sample.access_bins["table"]
+    assert isinstance(h, Histogram)
+    assert h.n_bins == N_LEAVES                # one bin per leaf
+    w = h.weights
+    # leaf 0's 4x fan-out lands exactly in its own bin: 4 of 11 reads
+    assert w[0] == pytest.approx(4.0 / (4 + (N_LEAVES - 1)), rel=1e-6)
+    assert np.allclose(w[1:], 1.0 / (4 + (N_LEAVES - 1)), rtol=1e-6)
+    # the histogram drives the profiler like any other truth stream
+    rt = Session(MACHINE, RuntimeConfig(fast_capacity_bytes=768 * KB,
+                                        backend="sim"))
+    rt.register("table", specs, chunkable=True)
+    src2 = XlaCostAnalysisSource(rt, edges="leaf")
+    src2.bind("step", lowered, ["table", 1], elapsed=5e-4)
+    rt.attach_source(src2)
+    for _ in range(2):
+        with rt.iteration():
+            with rt.phase("step"):
+                pass
+    bins = rt.profiler.object_bins("table")
+    assert bins
+    hw = next(iter(bins.values())).weights
+    assert hw[0] > 2.0 * hw[1:].mean()
+
+
+def test_leaf_edge_mode_validated():
+    sess = Session(MACHINE)
+    with pytest.raises(ValueError, match="uniform"):
+        XlaCostAnalysisSource(sess, edges="nope")

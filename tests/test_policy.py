@@ -97,7 +97,7 @@ def test_policy_registry_contents():
 
 def test_unknown_policy_raises_with_listing():
     with pytest.raises(ValueError, match="unimem"):
-        make_policy("lru")
+        make_policy("no_such_policy")
 
 
 def test_policy_reregistration_guard():
@@ -597,3 +597,68 @@ def test_pipeline_parity_with_old_build_path(wl_name, mover):
     assert old_res.iteration_times == new_res.iteration_times
     assert {o.name: o.tier for o in old_rt.registry} \
         == {o.name: o.tier for o in new_rt.registry}
+
+
+# ---------------------------------------------------------------------------
+# lru baseline policy plugin (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+def test_lru_policy_registered_and_builds_program():
+    from repro.core.policy import LruPolicy
+
+    assert "lru" in available_policies()
+    assert isinstance(make_policy("lru"), LruPolicy)
+
+    wl = SCENARIO_WORKLOADS["kv_serving"]()
+    cfg = RuntimeConfig(fast_capacity_bytes=256 * MB, drift_threshold=10.0,
+                        policy="lru")
+    res, rt = run_scenario(wl, config=cfg)
+    assert isinstance(rt.plan, PlanProgram)
+    assert rt.plan.policy == "lru"
+    assert rt.plan.strategy == "lru"
+    # solve-stage-only plugin: the characterization stages are unimem's
+    stages = [p.stage for p in rt.plan.provenance]
+    assert stages == ["attribute", "partition", "coalesce", "solve",
+                      "schedule"]
+    # demand-driven: every move fires at the phase that needs it (no
+    # lookahead triggers — the ablation's defining property)
+    assert rt.plan.moves
+    assert all(m.trigger_phase == m.needed_by for m in rt.plan.moves)
+    assert res.total_time > 0
+
+
+def test_lru_respects_capacity_and_evicts_least_recent():
+    from repro.core import policy as policy_mod
+    from repro.core.tiers import MachineProfile
+
+    reg = ObjectRegistry()
+    for n, sz in (("a", 40 * MB), ("b", 40 * MB), ("c", 40 * MB)):
+        reg.alloc(n, sz)
+    graph = build_phase_graph(
+        [("p0", {"a": 100.0}), ("p1", {"b": 100.0}), ("p2", {"c": 100.0})],
+        times=[0.1, 0.1, 0.1])
+    prof = PhaseProfiler(M, seed=0)
+    state = policy_mod.PipelineState(
+        machine=M, registry=reg, graph=graph, profiler=prof,
+        planner=Planner(M, reg, CF, 64 * MB), capacity=64 * MB,
+        config=RuntimeConfig(fast_capacity_bytes=64 * MB))
+    policy_mod.stage_solve_lru(state)
+    plan = state.plan
+    # one object fits at a time: each phase holds exactly its referenced
+    # object, and the previous phase's (least recent) object was evicted
+    assert plan.residents == [{"a"}, {"b"}, {"c"}]
+    evs = [m.obj for m in plan.moves if m.dst == "slow"]
+    assert evs == ["a", "b"]
+
+
+def test_lru_ablation_comparable_and_unimem_wins_with_lookahead():
+    """The ablation row: on the pointer-chasing scenario — where the
+    planner's dependency-safe lookahead triggers actually overlap the
+    shard swap — the benefit-model plan beats demand-driven recency.
+    (On other scenarios LRU is competitive; the committed scenarios.csv
+    ablation rows record the honest per-scenario picture.)"""
+    wl = SCENARIO_WORKLOADS["graph_chase"]()
+    uni_res, _ = run_scenario(wl, iters=10)
+    lru_res, _ = run_scenario(wl, iters=10, config=RuntimeConfig(
+        fast_capacity_bytes=256 * MB, drift_threshold=10.0, policy="lru"))
+    assert (uni_res.steady_iteration_time
+            < lru_res.steady_iteration_time)
