@@ -286,10 +286,11 @@ def bench_scenarios() -> None:
     # chunks need the churn-guarded pricing, so the mode ships as one
     # switch) vs the legacy fixed-width pipeline at the SAME total bin
     # budget (64), on skewed workloads whose true densities carry
-    # structure finer than one uniform bin.  Global search is pinned off
-    # for both arms (like drift_threshold pins replanning above) so the
-    # best-of-two chooser's prediction noise cannot dominate the rows;
-    # the committed gates enforce equal-or-better steady slack
+    # structure finer than one uniform bin.  Global search runs at its
+    # default (on): since PR 6 prices global moves through the same
+    # schedule-aware estimate as local ones, the best-of-two chooser no
+    # longer hands global a free-movement advantage, so the rows need no
+    # pin.  The committed gates enforce equal-or-better steady slack
     # (mr_gain >= 1) with hot-head chunks finer than one legacy bin
     # (hot_chunk_frac < 1).
     from repro.core.partition import chunk_spans
@@ -304,8 +305,7 @@ def bench_scenarios() -> None:
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
         common = dict(drift_threshold=10.0, chunk_aware=True,
-                      histogram_bins=64, profile_iterations=3,
-                      enable_global_search=False)
+                      histogram_bins=64, profile_iterations=3)
         uni, _ = run_unimem(mach, wl, **common)
         ref, rrt = run_unimem(mach, wl, histogram_refine=True, **common)
         us = (time.perf_counter() - t0) * 1e6
@@ -334,11 +334,16 @@ def bench_scenarios() -> None:
              f"hot_chunk_frac={frac:.3f};"
              f"n_chunks={n_chunks}")
 
-    # lru ablation (PR 5): the policy registry's clock/LRU baseline
-    # (solve stage replaced, characterization stages shared) against the
-    # paper's benefit-model planner, one row per scenario.  LRU wins on
-    # some rotations (fsdp_buckets) and loses where lookahead triggers
-    # matter (graph_chase) — the committed rows record the honest split.
+    # policy ablation (PR 5 + PR 6): the registry's clock/LRU baseline
+    # and the calibrated planner (calibrate_feedback=True, PR 6's online
+    # per-class CF folds) against the uncalibrated benefit-model planner,
+    # one row per scenario.  LRU wins some rotations against the
+    # *uncalibrated* model (fsdp_buckets books latency gains ~14x
+    # optimistic and plans essentially no moves); the calibrated arm
+    # closes that gap (``cal_parity`` = lru/unimem_cal, floor-gated at
+    # 1.0 on fsdp_buckets) and ``pred_err`` records how honest the kept
+    # model's prediction is (ceiling-gated where folds are kept; a
+    # reverted epoch keeps the uncalibrated prediction, err ~1.0).
     for wl_name, make in {**SCENARIO_WORKLOADS,
                           **SKEWED_SCENARIO_WORKLOADS}.items():
         wl = make()
@@ -346,13 +351,45 @@ def bench_scenarios() -> None:
         dram = run_static(mach, wl, "fast")
         uni, _ = run_unimem(mach, wl, drift_threshold=10.0)
         lru, _ = run_unimem(mach, wl, drift_threshold=10.0, policy="lru")
+        cal, crt = run_unimem(mach, wl, drift_threshold=10.0,
+                              calibrate_feedback=True)
         us = (time.perf_counter() - t0) * 1e6
         d = dram.steady_iteration_time
+        cs = crt.stats()
         emit(f"scenario_{wl_name}_ablation", us,
              f"unimem={uni.steady_iteration_time / d:.3f};"
              f"lru={lru.steady_iteration_time / d:.3f};"
+             f"unimem_cal={cal.steady_iteration_time / d:.3f};"
              f"lru_over_unimem="
-             f"{lru.steady_iteration_time / uni.steady_iteration_time:.3f}")
+             f"{lru.steady_iteration_time / uni.steady_iteration_time:.3f};"
+             f"cal_parity="
+             f"{lru.steady_iteration_time / cal.steady_iteration_time:.3f};"
+             f"pred_err={(cs['pred_err'] if cs['pred_err'] is not None else -1):.3f};"
+             f"n_folds={cs['n_recalibrations']}")
+
+    # interval-guidance ablation (PR 6): Olson-style decayed interval
+    # profiling (arxiv 2110.02150) as the third policy arm — recency
+    # (lru) vs decayed frequency/density (interval) vs the calibrated
+    # benefit model.  ``vs_nvm`` floors the rows: the guidance must keep
+    # a real speedup over NVM-only or the gate fails loudly.
+    for wl_name, make in {**SCENARIO_WORKLOADS,
+                          **SKEWED_SCENARIO_WORKLOADS}.items():
+        wl = make()
+        t0 = time.perf_counter()
+        dram = run_static(mach, wl, "fast")
+        nvm = run_static(mach, wl, "slow")
+        uni, _ = run_unimem(mach, wl, drift_threshold=10.0)
+        itv, irt = run_unimem(mach, wl, drift_threshold=10.0,
+                              policy="interval")
+        us = (time.perf_counter() - t0) * 1e6
+        d = dram.steady_iteration_time
+        emit(f"scenario_{wl_name}_interval", us,
+             f"interval={itv.steady_iteration_time / d:.3f};"
+             f"interval_over_unimem="
+             f"{itv.steady_iteration_time / uni.steady_iteration_time:.3f};"
+             f"vs_nvm="
+             f"{nvm.steady_iteration_time / itv.steady_iteration_time:.3f};"
+             f"moves={len(irt.plan.moves) if irt.plan else 0}")
     write_rows("scenarios.csv", "scenario_")
 
 

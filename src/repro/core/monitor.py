@@ -22,7 +22,11 @@ class DriftEvent:
 
     @property
     def ratio(self) -> float:
-        return self.observed / self.baseline if self.baseline > 0 else float("inf")
+        """Observed-over-baseline slowdown.  A zero/negative baseline means
+        the phase was never meaningfully observed — there is no slowdown to
+        report, so the ratio is a neutral 1.0 (an infinite ratio here would
+        poison any threshold comparison built on it)."""
+        return self.observed / self.baseline if self.baseline > 0 else 1.0
 
 
 class VariationMonitor:

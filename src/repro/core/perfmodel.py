@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+import warnings
+from typing import Optional, Tuple
 
 from .profiler import ObjectPhaseProfile
 from .tiers import MachineProfile
@@ -35,8 +36,26 @@ class Sensitivity(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationConstants:
+    """CF_bw / CF_lat (paper §3.1.2) plus the online-feedback state.
+
+    The calibration feedback loop folds live predicted-vs-measured
+    corrections *into the same constants* the static microbenchmarks
+    produce: per-phase realized gains regress multiplicative corrections
+    onto ``cf_bw`` / ``cf_lat`` (the two benefit classes can be
+    mis-calibrated in opposite directions, and only a per-class fold can
+    change the knapsack's ranking), while measured fence stalls calibrate
+    ``cf_move`` — a movement-price scale applied to the Eq. (4)/eviction
+    costs.  All folds are multiplicative, so at the defaults every benefit
+    and cost value is bitwise identical to the pre-feedback model
+    (``x * 1.0 == x`` for float64).  ``provenance`` records where each
+    constant came from — a measured microbenchmark, a
+    degenerate-denominator fallback, or an online fold — so a fallback or
+    fold can never masquerade as a measured calibration."""
+
     cf_bw: float = 1.0
     cf_lat: float = 1.0
+    cf_move: float = 1.0
+    provenance: Tuple[str, ...] = ()
 
 
 # --------------------------------------------------------------------------
@@ -90,14 +109,33 @@ def benefit(p: ObjectPhaseProfile, machine: MachineProfile,
     return max(benefit_bw(p, machine, cf), benefit_lat(p, machine, cf))
 
 
+def gain_class(p: ObjectPhaseProfile, machine: MachineProfile,
+               cf: CalibrationConstants) -> str:
+    """Which benefit model a (phase, object) pair's gain is booked under:
+    ``"bw"`` (Eq. 2) or ``"lat"`` (Eq. 3).  MIXED resolves to the model
+    :func:`benefit` actually took the max from (ties go to bandwidth,
+    matching the vectorized path) — the attribution key the calibration
+    feedback uses to regress per-class realization factors."""
+    s = classify(p, machine)
+    if s is Sensitivity.BANDWIDTH:
+        return "bw"
+    if s is Sensitivity.LATENCY:
+        return "lat"
+    return ("bw" if benefit_bw(p, machine, cf) >= benefit_lat(p, machine, cf)
+            else "lat")
+
+
 def benefit_batch(data_access, n_samples, samples_with_access, phase_time,
                   cacheline_bytes, machine: MachineProfile,
-                  cf: CalibrationConstants):
+                  cf: CalibrationConstants, return_class: bool = False):
     """Vectorized Eq. (1)-(3): classification + benefit for N profiles at
     once (the planner's hot path at chunk counts in the thousands).
 
     Element-for-element this performs the same float64 operations as the
-    scalar :func:`benefit` path, so the two agree bitwise.
+    scalar :func:`benefit` path, so the two agree bitwise.  With
+    ``return_class`` the resolved benefit class per element (0 = bw,
+    1 = lat, mirroring :func:`gain_class`) is returned alongside the
+    values — the calibration feedback's attribution key.
     """
     import numpy as np
 
@@ -111,12 +149,22 @@ def benefit_batch(data_access, n_samples, samples_with_access, phase_time,
     denom = (swa / np.maximum(ns, 1.0)) * pt
     with np.errstate(divide="ignore", invalid="ignore"):
         bw = np.where(denom > 0.0, accessed / denom, 0.0)
-    bft_bw = (accessed / machine.slow.bw - accessed / machine.fast.bw) * cf.cf_bw
-    bft_lat = (da * machine.slow.lat - da * machine.fast.lat) * cf.cf_lat
+    bft_bw = ((accessed / machine.slow.bw - accessed / machine.fast.bw)
+              * cf.cf_bw)
+    bft_lat = ((da * machine.slow.lat - da * machine.fast.lat)
+               * cf.cf_lat)
     peak = machine.bw_peak
-    return np.where(bw >= T1_BANDWIDTH * peak, bft_bw,
+    vals = np.where(bw >= T1_BANDWIDTH * peak, bft_bw,
                     np.where(bw < T2_LATENCY * peak, bft_lat,
                              np.maximum(bft_bw, bft_lat)))
+    if not return_class:
+        return vals
+    # class attribution mirroring :func:`gain_class`: MIXED resolves to
+    # the winning model, ties to bandwidth
+    cls = np.where(bw >= T1_BANDWIDTH * peak, 0,
+                   np.where(bw < T2_LATENCY * peak, 1,
+                            np.where(bft_lat > bft_bw, 1, 0)))
+    return vals, cls
 
 
 # --------------------------------------------------------------------------
@@ -138,6 +186,93 @@ def weight(bft: float, cost: float, extra_cost: float = 0.0) -> float:
 # CF calibration (paper §3.1.2): run a bandwidth-bound (STREAM-like) and a
 # latency-bound (pointer-chasing-like) workload; CF = measured / predicted.
 # --------------------------------------------------------------------------
+def _cf_ratio(measured: float, predicted: float, name: str
+              ) -> Tuple[float, str]:
+    """measured/predicted with an *audited* fallback: a degenerate
+    denominator yields CF=1.0, warns, and is recorded in provenance so it
+    can never masquerade as a measured calibration."""
+    if predicted <= 0.0:
+        warnings.warn(
+            f"calibrate: degenerate predicted time for {name} "
+            f"(predicted={predicted!r}); falling back to CF=1.0",
+            RuntimeWarning, stacklevel=3)
+        return 1.0, f"{name}:fallback(predicted={predicted:g})"
+    return measured / predicted, f"{name}:measured"
+
+
+def solve_gain_folds(rows, *, ridge: float = 0.05, lo: float = 0.05,
+                     hi: float = 20.0) -> Tuple[float, float]:
+    """Per-class benefit realization factors from one measured iteration.
+
+    ``rows`` holds one ``(booked_bw, booked_lat, realized)`` triple per
+    phase: the plan's Eq. (2)/Eq. (3) gain booked for that phase, split by
+    benefit class, and the gain the measurement realized (profiled
+    baseline phase time minus measured phase time).  Because Eq. (2)/(3)
+    are linear in the CFs, the multiplicative corrections ``(a, b)`` that
+    would have made the prediction match solve the least-squares system
+    ``a*booked_bw + b*booked_lat ≈ realized`` over the phases.
+
+    A single scalar correction cannot do this: scaling both classes by
+    the same factor preserves the knapsack's ranking, and the two classes
+    are routinely mis-calibrated in *opposite* directions (a strict
+    rotation's latency gains over-credit while its bandwidth gains are
+    honest).  Phases with only one class booked pin that class's factor;
+    the ridge term (scaled to the problem, pulling toward the neutral
+    1.0) keeps a class nobody booked — or a degenerate, collinear system
+    — at its current calibration instead of letting the solve invent a
+    correction for it.  Results are clipped to ``[lo, hi]``."""
+    s_bb = s_bl = s_ll = y_b = y_l = 0.0
+    for g_bw, g_lat, realized in rows:
+        s_bb += g_bw * g_bw
+        s_bl += g_bw * g_lat
+        s_ll += g_lat * g_lat
+        y_b += g_bw * realized
+        y_l += g_lat * realized
+    lam = ridge * max(s_bb, s_ll)
+    if lam <= 0.0:
+        return 1.0, 1.0
+    a11, a12, a22 = s_bb + lam, s_bl, s_ll + lam
+    b1, b2 = y_b + lam, y_l + lam        # the prior pulls toward 1.0
+    det = a11 * a22 - a12 * a12
+    if det <= 0.0:
+        return 1.0, 1.0
+    a = (b1 * a22 - b2 * a12) / det
+    b = (b2 * a11 - b1 * a12) / det
+    clip = lambda x: min(max(x, lo), hi)
+    return clip(a), clip(b)
+
+
+def fold_online(cf: CalibrationConstants, *, gain_bw: float = 1.0,
+                gain_lat: float = 1.0, move: float = 1.0,
+                blend: float = 1.0, lo: float = 0.05, hi: float = 20.0,
+                note: str = "") -> CalibrationConstants:
+    """Fold one iteration's multiplicative corrections into the constants.
+
+    ``gain_bw`` / ``gain_lat`` come from :func:`solve_gain_folds`;
+    ``move`` is the measured-stall over booked-unhidden-cost ratio (the
+    movement-price realization).  Each factor is EMA-blended toward 1.0
+    (``blend`` = 1.0 applies it fully) and clipped to ``[lo, hi]`` so one
+    noisy iteration can neither zero nor explode the model; ``cf_move``
+    is additionally clipped cumulatively (its neutral point is an
+    absolute 1.0, unlike the measured ``cf_bw``/``cf_lat``).  Returns
+    ``cf`` unchanged (the same object) when every fold is a no-op."""
+    def damp(m: float) -> float:
+        m = 1.0 + blend * (m - 1.0)
+        return min(max(m, lo), hi)
+
+    f_bw, f_lat, f_move = damp(gain_bw), damp(gain_lat), damp(move)
+    new_bw = cf.cf_bw * f_bw
+    new_lat = cf.cf_lat * f_lat
+    new_move = min(max(cf.cf_move * f_move, lo), hi)
+    if (new_bw, new_lat, new_move) == (cf.cf_bw, cf.cf_lat, cf.cf_move):
+        return cf
+    tag = (f"online(bw*{f_bw:.3g},lat*{f_lat:.3g},move*{f_move:.3g}"
+           f"{';' + note if note else ''})")
+    return dataclasses.replace(
+        cf, cf_bw=float(new_bw), cf_lat=float(new_lat),
+        cf_move=float(new_move), provenance=cf.provenance + (tag,))
+
+
 def calibrate(machine: MachineProfile, *, seed: int = 0) -> CalibrationConstants:
     """Measure CF_bw / CF_lat against the discrete-event simulator.
 
@@ -159,7 +294,7 @@ def calibrate(machine: MachineProfile, *, seed: int = 0) -> CalibrationConstants
                                  accesses={"stream": accesses}))
     p = prof.profile(0, "stream")
     predicted = (p.data_access * machine.cacheline_bytes) / machine.fast.bw
-    cf_bw = measured_bw_time / predicted if predicted > 0 else 1.0
+    cf_bw, prov_bw = _cf_ratio(measured_bw_time, predicted, "cf_bw")
 
     # ---- pChase-like: dependent accesses, single chain ---------------------
     n_chase = 1_000_000
@@ -169,6 +304,7 @@ def calibrate(machine: MachineProfile, *, seed: int = 0) -> CalibrationConstants
                                   accesses={"chase": float(n_chase)}))
     p2 = prof2.profile(0, "chase")
     predicted_lat = p2.data_access * machine.fast.lat
-    cf_lat = measured_lat_time / predicted_lat if predicted_lat > 0 else 1.0
+    cf_lat, prov_lat = _cf_ratio(measured_lat_time, predicted_lat, "cf_lat")
 
-    return CalibrationConstants(cf_bw=float(cf_bw), cf_lat=float(cf_lat))
+    return CalibrationConstants(cf_bw=float(cf_bw), cf_lat=float(cf_lat),
+                                provenance=(prov_bw, prov_lat))

@@ -157,6 +157,18 @@ class PlacementPlan:
     # per-candidate window computation at all (the scoped fast path).
     graph_digest: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # Per-phase prediction decomposition for the calibration feedback: the
+    # profiled baseline phase times and the booked slow->fast gain per
+    # phase split by benefit class ("bw" = Eq. 2, "lat" = Eq. 3).  One
+    # measured iteration then yields one realized-gain equation per phase,
+    # which is what makes the per-class correction factors identifiable
+    # (a whole-iteration scalar cannot separate the classes).
+    phase_baseline: List[float] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    phase_gain_bw: List[float] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    phase_gain_lat: List[float] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
 
     def moves_for_phase(self, phase_index: int, n_phases: int) -> List[MoveOp]:
         """Moves triggered at the start of ``phase_index`` (wrapping)."""
@@ -213,9 +225,12 @@ class _ProfileView:
         self._fracs: Dict[Tuple[int, str], Dict[str, float]] = {}
         # phase -> {obj: benefit or None (no profile)}
         self._benefit: Dict[int, Dict[str, Optional[float]]] = {}
+        # phase -> {obj: resolved benefit class "bw" | "lat"}
+        self._class: Dict[int, Dict[str, str]] = {}
         # (phase, obj) -> scalar-path result, for objects outside ensure()'s
         # candidate sets (e.g. residents carried over from earlier phases)
         self._fallback: Dict[Tuple[int, str], float] = {}
+        self._fallback_class: Dict[Tuple[int, str], str] = {}
 
     def _chunk_fracs(self, phase: int, parent: str) -> Dict[str, float]:
         key = (phase, parent)
@@ -262,11 +277,13 @@ class _ProfileView:
             return
         names = [r[0] for r in rows]
         cols = np.array([r[1:] for r in rows], dtype=np.float64)
-        bft = perfmodel.benefit_batch(
+        bft, cls = perfmodel.benefit_batch(
             cols[:, 0], cols[:, 1], cols[:, 2], cols[:, 3], cols[:, 4],
-            self.planner.machine, self.planner.cf)
-        for name, b in zip(names, bft):
+            self.planner.machine, self.planner.cf, return_class=True)
+        ccache = self._class.setdefault(phase, {})
+        for name, b, c in zip(names, bft, cls):
             cache[name] = float(b)
+            ccache[name] = "lat" if c else "bw"
 
     def has_profile(self, phase: int, obj: str) -> bool:
         return self._benefit.get(phase, {}).get(obj) is not None
@@ -284,6 +301,20 @@ class _ProfileView:
             val = self.planner._benefit_scalar(self.profiler, phase, obj)
             self._fallback[key] = val
         return val
+
+    def gain_class(self, phase: int, obj: str) -> str:
+        """Resolved benefit class of ``(phase, obj)`` — batch-cached when
+        :meth:`ensure` computed the benefit, scalar-memoized otherwise
+        (the same fallback population as :meth:`benefit`)."""
+        c = self._class.get(phase, {}).get(obj)
+        if c is not None:
+            return c
+        key = (phase, obj)
+        c = self._fallback_class.get(key)
+        if c is None:
+            c = self.planner._gain_class_scalar(self.profiler, phase, obj)
+            self._fallback_class[key] = c
+        return c
 
 
 class _WindowIndex:
@@ -392,6 +423,29 @@ class Planner:
         # bytes).  Off by default: legacy plans stay bit-identical.
         self.enact_consistent = enact_consistent
 
+    # ------------------------------------------------------------ move pricing
+    def price_fetch(self, size_bytes: int, overlap_window: float) -> float:
+        """Eq. (4) unhidden cost of one slow->fast copy given its overlap
+        window — the single pricing authority for *both* searches, so the
+        best-of-two chooser always compares cost-inclusive numbers priced
+        the same way (a cost-free global estimate against a cost-inclusive
+        local one is how the original chooser bug crept in)."""
+        cost = perfmodel.movement_cost(size_bytes, self.machine,
+                                       overlap_window)
+        if self.enact_consistent:
+            # churn guard (see _solve_phase): an overlappable copy still
+            # spends real copy bandwidth and serves slow until it lands
+            cost = max(cost, size_bytes / self.machine.copy_bw)
+        return cost * self.cf.cf_move
+
+    def price_eviction(self, size_bytes: int) -> float:
+        """Space-clearing demotion: the outgoing copy serializes with the
+        incoming one, so its full copy time lands on the critical path.
+        Scaled — like :meth:`price_fetch` — by the online-calibrated
+        movement-price factor (``cf_move`` is 1.0 until the calibration
+        feedback folds a measured stall ratio into it)."""
+        return size_bytes / self.machine.copy_bw * self.cf.cf_move
+
     # ------------------------------------------------------------------ util
     def _profile(self, profiler: PhaseProfiler, phase: int, obj: str):
         p = profiler.profile(phase, obj)
@@ -425,6 +479,15 @@ class Planner:
         if p is None:
             return 0.0
         return perfmodel.benefit(p, self.machine, self.cf)
+
+    def _gain_class_scalar(self, profiler: PhaseProfiler, phase: int,
+                           obj: str) -> str:
+        """Benefit class ("bw" | "lat") a (phase, obj) gain is booked
+        under — the calibration feedback's attribution key."""
+        p = self._profile(profiler, phase, obj)
+        if p is None:
+            return "bw"
+        return perfmodel.gain_class(p, self.machine, self.cf)
 
     # kept as the public scalar entry point (tests, legacy mode)
     _benefit = _benefit_scalar
@@ -511,15 +574,7 @@ class Planner:
                 meta[o] = dict(cost=0.0, extra=0.0, resident=True, bft=bft)
                 continue
             overlap = windows[o][1]
-            cost = perfmodel.movement_cost(size(o), self.machine, overlap)
-            if self.enact_consistent:
-                # churn guard: an overlappable copy still spends real copy
-                # bandwidth and leaves the chunk in flight (slow-tier
-                # service until it lands) — price every fetch at least its
-                # full-bandwidth copy time.  Without this, fine chunks'
-                # overlap windows zero their cost and the solve swaps
-                # near-equal sub-chunks every phase for no realized gain.
-                cost = max(cost, size(o) / self.machine.copy_bw)
+            cost = self.price_fetch(size(o), overlap)
             extra = 0.0
             deficit = size(o) - free
             if deficit > 0:
@@ -527,11 +582,11 @@ class Planner:
                 # phase's start -> the incoming copy cannot overlap
                 # earlier phases (paper Fig 6: movement respects the
                 # availability of DRAM space).
-                cost = perfmodel.movement_cost(size(o), self.machine, 0.0)
+                cost = self.price_fetch(size(o), 0.0)
                 evict_bytes = evictables.quote(deficit)
                 if evict_bytes is None:
                     continue   # cannot fit even with evictions
-                extra = evict_bytes / self.machine.copy_bw
+                extra = self.price_eviction(evict_bytes)
             w = perfmodel.weight(bft, cost, extra)
             items.append(knapsack.Item(o, w, size(o)))
             meta[o] = dict(cost=cost, extra=extra, resident=False, bft=bft)
@@ -575,7 +630,7 @@ class Planner:
                     freed += size(r)
                     moves.append(MoveOp(r, "slow", ph.index, ph.index,
                                         size(r),
-                                        size(r) / self.machine.copy_bw))
+                                        self.price_eviction(size(r))))
                 if freed < deficit:
                     # Cannot fit even after evicting everything allowed:
                     # skip the object but *keep* the evictions — they act
@@ -692,6 +747,10 @@ class Planner:
         # Benefit values come from each decision's cache (batch-ensured at
         # solve time; bitwise-reproducible, so reuse cannot change them).
         predicted = graph.iteration_time()
+        gain_bw = [0.0] * len(graph)
+        gain_lat = [0.0] * len(graph)
+        cls_of = ((lambda i, o: view.gain_class(i, o)) if view is not None
+                  else (lambda i, o: self._gain_class_scalar(profiler, i, o)))
         for ph in graph:
             bmap = bmaps[ph.index]
             if bmap is None:    # decision from a pre-cache serialized plan
@@ -699,13 +758,21 @@ class Planner:
                                                 placements[ph.index])
             for o in sorted(placements[ph.index]):   # fixed fp-sum order
                 if o in originally_slow:
-                    predicted -= bmap[o]
+                    g = bmap[o]
+                    predicted -= g
+                    if g != 0.0:
+                        if cls_of(ph.index, o) == "lat":
+                            gain_lat[ph.index] += g
+                        else:
+                            gain_bw[ph.index] += g
         predicted += sum(m.est_unhidden_cost for m in moves)
         return PlacementPlan("local", placements, moves,
                              max(predicted, 0.0), graph.iteration_time(),
                              emit_schedule(moves, graph, self.machine.copy_bw),
                              phase_decisions=decisions,
-                             graph_digest=digest)
+                             graph_digest=digest,
+                             phase_baseline=[p.time for p in graph],
+                             phase_gain_bw=gain_bw, phase_gain_lat=gain_lat)
 
     # ---------------------------------------------------------- global search
     def plan_global(self, graph: PhaseGraph, profiler: PhaseProfiler, *,
@@ -766,7 +833,8 @@ class Planner:
             for o in p.refs:
                 first_ref.setdefault(o, p.index)
         for o in sorted(residents0 - chosen):   # deterministic move order
-            moves.append(MoveOp(o, "slow", 0, 0, size(o), 0.0))
+            moves.append(MoveOp(o, "slow", 0, 0, size(o),
+                                self.price_eviction(size(o))))
         for o in sorted(chosen, key=lambda o: (first_ref.get(o, 0), o)):
             if o in originally_slow:
                 predicted -= by[o].value
@@ -774,14 +842,42 @@ class Planner:
                 # One-time move, dispatched at iteration start and fenced at
                 # the object's first use so it overlaps the leading phases
                 # (this is what makes the paper's Table-4 overlap percentages
-                # non-zero for global placements).
-                moves.append(MoveOp(o, "fast", 0, first_ref.get(o, 0),
-                                    size(o), 0.0, est_benefit=by[o].value))
+                # non-zero for global placements).  Priced through the same
+                # Eq. (4) helper as the local search — the overlap window is
+                # the compute between dispatch and the fence — so the
+                # best-of-two chooser compares cost-inclusive numbers on
+                # both sides.
+                fence = first_ref.get(o, 0)
+                window = graph.window_between(0, fence)
+                moves.append(MoveOp(o, "fast", 0, fence, size(o),
+                                    self.price_fetch(size(o), window),
+                                    est_benefit=by[o].value))
+        predicted += sum(m.est_unhidden_cost for m in moves)
+        # Per-phase gain decomposition for the calibration feedback: the
+        # chosen slow objects' per-phase contributions, split by benefit
+        # class (the per-object totals the knapsack saw are these same
+        # rows summed over phases).
+        gain_bw = [0.0] * n
+        gain_lat = [0.0] * n
+        cls_of = ((lambda i, o: view.gain_class(i, o)) if view is not None
+                  else (lambda i, o: self._gain_class_scalar(profiler, i, o)))
+        chosen_slow = [i for i, o in enumerate(objs)
+                       if o in chosen and o in originally_slow]
+        for g in contribs_out:
+            for i in chosen_slow:
+                v = float(g.row[i])
+                if v != 0.0:
+                    if cls_of(g.phase_index, objs[i]) == "lat":
+                        gain_lat[g.phase_index] += v
+                    else:
+                        gain_bw[g.phase_index] += v
         placements = [set(chosen)] * n
         return PlacementPlan("global", list(placements), moves,
                              max(predicted, 0.0), graph.iteration_time(),
                              emit_schedule(moves, graph, self.machine.copy_bw),
-                             global_contribs=contribs_out)
+                             global_contribs=contribs_out,
+                             phase_baseline=[p.time for p in graph],
+                             phase_gain_bw=gain_bw, phase_gain_lat=gain_lat)
 
     # ----------------------------------------------------------- best of two
     def plan(self, graph: PhaseGraph, profiler: PhaseProfiler, *,

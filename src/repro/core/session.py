@@ -39,12 +39,14 @@ built; see ``RuntimeConfig.incremental_replan``).
 from __future__ import annotations
 
 import contextlib
+import copy
 import dataclasses
 import time as _time
 from typing import Any, Dict, List, Optional, Sequence
 
 from . import backends as backends_mod
 from . import initial as initial_mod
+from . import perfmodel
 from . import policy as policy_mod
 from .data_objects import DataObject, ObjectRegistry
 from .instrumentation import InstrumentationSource, PhaseSample
@@ -52,7 +54,7 @@ from .monitor import VariationMonitor
 from .mover import ProactiveMover, SlackAwareMover, TierBackend
 from .perfmodel import CalibrationConstants
 from .phase import Phase, PhaseGraph, PhaseTraceEvent
-from .planner import PlacementPlan, Planner
+from .planner import MoveOp, PlacementPlan, Planner, emit_schedule
 from .profiler import PhaseProfiler
 from .tiers import MachineProfile
 
@@ -121,6 +123,27 @@ class RuntimeConfig:
     # evictions may only use the minimum-priority channels and can never
     # head-of-line-block a fetch).  None = all channels equal (legacy).
     copy_channel_priorities: Optional[Sequence[int]] = None
+    # Online calibration feedback (perfmodel.fold_online): after each
+    # (re)plan settles, regress the plan's per-phase predicted gains
+    # against the measured phase times, fold per-class correction factors
+    # into CalibrationConstants.cf_bw/cf_lat (the two benefit classes can
+    # be mis-calibrated in opposite directions) and a movement-price
+    # factor from measured fence stalls into cf_move, then rebuild the
+    # plan under the corrected model.  Off by default — all folds are
+    # multiplicative with neutral 1.0 factors, so every plan is
+    # bit-identical to the pre-feedback pipeline.
+    calibrate_feedback: bool = False
+    # Max correction/rebuild rounds per plan epoch (a profiling-driven
+    # build re-arms the budget; each recalibration rebuild re-measures).
+    calibration_rounds: int = 3
+    # Relative |predicted - measured| / measured below which the model
+    # counts as calibrated and no correction fires.
+    calibration_tolerance: float = 0.10
+    # EMA blend toward the regression target (1.0 jumps straight there).
+    calibration_blend: float = 1.0
+    # Interval-guidance policy (policy="interval", Olson et al. style):
+    # per-interval exponential decay of the access-heat ranking.
+    interval_decay: float = 0.6
 
 
 @dataclasses.dataclass
@@ -185,6 +208,29 @@ class Session:
         self._static_refs: Dict[str, float] = {}
         self.n_replans = 0              # drift-triggered replan cycles
         self.n_incremental_replans = 0  # ... served without dropping the plan
+        # Calibration feedback state: per-iteration measurement
+        # accumulators, the per-plan-epoch correction budget, and the flag
+        # that invalidates standing-plan reuse after a CF change (a cf
+        # change moves every cached benefit without touching any reuse
+        # fingerprint, so scoped reuse must be bypassed wholesale).
+        self._iter_stall_s = 0.0
+        self._iter_elapsed_s = 0.0
+        self._iter_phase_elapsed: Dict[int, float] = {}
+        self._measuring_baseline = False
+        self._measure_pending = False
+        self._cal_rounds_left = 0
+        self._cf_dirty = False
+        # best measured iteration this plan epoch and the constants that
+        # produced it — the feedback's safety net: a fold that makes the
+        # *measured* iteration worse is reverted, so calibration can only
+        # keep a model whose plan demonstrably improved the workload
+        self._cal_best: Optional[tuple] = None
+        # profiler state frozen at the first fold of an epoch, so a revert
+        # re-solves from the same inputs that produced the epoch's best plan
+        self._cal_snapshot: Optional[dict] = None
+        self.n_recalibrations = 0       # CF folds applied by the feedback
+        self.last_measured_iteration_time: Optional[float] = None
+        self.last_pred_err: Optional[float] = None
 
     # ------------------------------------------------------------ registration
     def register(self, name: str, spec: Any = None, *,
@@ -274,6 +320,17 @@ class Session:
         self._events_this_iter = []
         self._iter_open = False
         self._open_phase = None
+        self._iter_stall_s = 0.0
+        self._iter_elapsed_s = 0.0
+        self._iter_phase_elapsed = {}
+        self._measuring_baseline = False
+        self._measure_pending = False
+        self._cal_rounds_left = 0
+        self._cf_dirty = False
+        self._cal_best = None
+        self._cal_snapshot = None
+        self.last_measured_iteration_time = None
+        self.last_pred_err = None
         self.profiler.clear()
         self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
         self.graph = PhaseGraph(
@@ -392,6 +449,20 @@ class Session:
     def _begin_iteration(self) -> None:
         self._iter_open = True
         self._events_this_iter = []
+        self._iter_stall_s = 0.0
+        self._iter_elapsed_s = 0.0
+        self._iter_phase_elapsed = {}
+        # The plan's prediction made observable: the first *settled*
+        # iteration after a (re)plan — the one that begins with the
+        # monitor-baseline window already closed, so the plan's one-time
+        # enactment transient (bulk fetches landing mid-iteration) does
+        # not contaminate the steady-state measurement the feedback
+        # regresses against.  Its measured time (phase elapsed + fence
+        # stalls) closes the loop at _end_iteration.
+        self._measuring_baseline = (self._measure_pending
+                                    and self.plan is not None
+                                    and not self._baseline_pending
+                                    and not self._profiling)
 
     def _phase_begin(self, index: int) -> float:
         """Enter phase ``index``: fence + trigger proactive moves.  Returns
@@ -408,7 +479,9 @@ class Session:
             n = self._plan_n_phases or len(self._phase_names)
             if index >= n:
                 return 0.0
-            return self.mover.on_phase_start(self.plan, index, n)
+            stall = self.mover.on_phase_start(self.plan, index, n)
+            self._iter_stall_s += stall
+            return stall
         return 0.0
 
     def _phase_end(self, index: int, *, elapsed: float,
@@ -428,6 +501,9 @@ class Session:
                              time_shares=time_shares,
                              access_bins=access_bins)
         self._events_this_iter.append(ev)
+        self._iter_elapsed_s += elapsed
+        self._iter_phase_elapsed[index] = (
+            self._iter_phase_elapsed.get(index, 0.0) + elapsed)
         if self._profiling:
             # Scoped drift response: only the drifted phases re-observe, so
             # every other phase's profile state stays bitwise identical and
@@ -481,6 +557,12 @@ class Session:
             # variable phase sets: if the baseline iteration did not reach
             # the last registered phase, close the baseline window here
             self._baseline_pending = False
+        if (self._measuring_baseline and not self._baseline_pending
+                and self.plan is not None and self._events_this_iter):
+            self._measuring_baseline = False
+            self._measure_pending = False
+            self._on_baseline_measured(self._iter_elapsed_s
+                                       + self._iter_stall_s)
 
     # ------------------------------------------------------------- internals
     def _pipeline_state(self) -> "policy_mod.PipelineState":
@@ -488,8 +570,14 @@ class Session:
         standing program (when a plan is live and incremental replanning is
         on) lets the solve stage re-solve only the phases whose inputs
         changed."""
+        # A CF fold moves every cached benefit value without touching any
+        # reuse fingerprint (profile versions and registry generation are
+        # unchanged), so after one the standing program must be dropped
+        # wholesale — scoped reuse would splice stale-benefit decisions
+        # into the recalibrated plan.
         standing = (self.plan
                     if (self.config.incremental_replan
+                        and not self._cf_dirty
                         and isinstance(self.plan, policy_mod.PlanProgram))
                     else None)
         return policy_mod.PipelineState(
@@ -497,12 +585,20 @@ class Session:
             profiler=self.profiler, planner=self.planner,
             capacity=self.capacity, config=self.config, standing=standing)
 
-    def _build_plan(self) -> None:
+    def _build_plan(self, *, recalibration: bool = False) -> None:
         assert self.graph is not None
         self.plan = self.policy.build(self._pipeline_state())
         self._drift_scope = None
+        self._cf_dirty = False
         if self.plan is None:
             return
+        if not recalibration:
+            # a profiling-driven build opens a new plan epoch: re-arm the
+            # calibration-correction budget and the best-measured memory
+            self._cal_rounds_left = self.config.calibration_rounds
+            self._cal_best = None
+            self._cal_snapshot = None
+        self._measure_pending = True
         self._plan_n_phases = len(self._phase_names)
         self._baseline_pending = True
         self.monitor.consume_events()
@@ -511,6 +607,161 @@ class Session:
             if hasattr(self.mover, "load_plan"):
                 self.mover.load_plan(self.plan, self.graph)
             self.mover.on_phase_start(self.plan, 0, self._plan_n_phases)
+
+    def _on_baseline_measured(self, measured: float) -> None:
+        """Calibration feedback — the live extension of
+        :func:`perfmodel.calibrate`'s CF idiom (paper §3.1.2) to in-loop
+        observations.  The first settled iteration after a (re)plan is
+        the plan's own prediction made observable: ``measured`` is its
+        phase elapsed plus fence stalls, directly comparable to
+        ``predicted_iteration_time`` (baseline − modeled gain + unhidden
+        movement cost).  When the relative error exceeds the tolerance,
+        two measurement channels the session already separates fold
+        corrections into the constants:
+
+        * **per-phase elapsed** — each phase's realized gain (profiled
+          baseline time minus measured time) against the plan's booked
+          per-class gains regresses multiplicative corrections onto
+          ``cf_bw`` / ``cf_lat`` (:func:`perfmodel.solve_gain_folds`;
+          only a per-class fold can change the knapsack's ranking);
+        * **fence stalls** — measured stall over booked unhidden movement
+          cost calibrates the movement-price factor ``cf_move``.
+
+        The plan is then rebuilt under the corrected model — bounded by
+        ``calibration_rounds`` per plan epoch so a noisy workload cannot
+        thrash the solve."""
+        assert self.plan is not None
+        plan = self.plan
+        predicted = plan.predicted_iteration_time
+        self.last_measured_iteration_time = measured
+        self.last_pred_err = (abs(predicted - measured) / measured
+                              if measured > 0 else None)
+        if not self.config.calibrate_feedback:
+            return
+        if self._cal_best is None or measured < self._cal_best[0]:
+            self._cal_best = (measured, self.cf, plan)
+        # The epoch closes when the correction budget is spent, the model
+        # believes itself (predicted within tolerance of measured), or the
+        # fold trajectory is demonstrably worsening — the corrected model's
+        # plan measures more than half a tolerance band worse than the
+        # epoch's best.  The early stop matters as much as the folds: every
+        # additional excursion iteration both runs slow *and* pollutes the
+        # profiler history the eventual revert rebuilds from.
+        band = 1.0 + 0.5 * self.config.calibration_tolerance
+        worsening = (self._cal_best is not None
+                     and measured > self._cal_best[0] * band)
+        closing = (self._cal_rounds_left <= 0 or self.last_pred_err is None
+                   or self.last_pred_err <= self.config.calibration_tolerance
+                   or worsening)
+        if closing:
+            # Best-of-measured safety net, decided once per epoch: the fold
+            # trajectory may climb through worse intermediate plans and can
+            # also end *honest but pessimal* — a self-consistent model whose
+            # plan measures worse than the uncorrected one.  Reverting
+            # restores the epoch's best *plan*, not just its constants:
+            # re-solving under the old constants is a lottery, because the
+            # knapsack weighs benefit minus fetch cost and objects the
+            # excursion already moved fast are selected for free while the
+            # best plan's picks now carry fetch costs (placement lock-in).
+            # Near-ties inside the band stay on the current constants.
+            (best_meas, best_cf, best_plan) = (
+                self._cal_best if self._cal_best is not None
+                else (measured, self.cf, plan))
+            snapshot, self._cal_snapshot = self._cal_snapshot, None
+            self._cal_rounds_left = 0
+            self._cal_best = None
+            if best_cf is not self.cf and measured > best_meas * band:
+                best_cf = dataclasses.replace(
+                    best_cf, provenance=best_cf.provenance
+                    + (f"online:revert(iter{self._iteration})",))
+                self.cf = best_cf
+                self.planner.cf = best_cf
+                if snapshot is not None:
+                    # the excursion's iterations ran under thrashing plans;
+                    # drop the history they contaminated (identity-preserving
+                    # restore: other components hold the same object) so the
+                    # restored plan's standing state and any later drift
+                    # replan see the inputs that produced it.
+                    self.profiler.__dict__.clear()
+                    self.profiler.__dict__.update(snapshot)
+                self._cf_dirty = False
+                self._restore_plan(best_plan)
+            return
+        rows = []
+        pb, gb, gl = (plan.phase_baseline, plan.phase_gain_bw,
+                      plan.phase_gain_lat)
+        for idx, elapsed in sorted(self._iter_phase_elapsed.items()):
+            if idx < len(pb) and idx < len(gb) and idx < len(gl) \
+                    and (gb[idx] != 0.0 or gl[idx] != 0.0):
+                rows.append((gb[idx], gl[idx], pb[idx] - elapsed))
+        mult_bw, mult_lat = (perfmodel.solve_gain_folds(rows)
+                             if rows else (1.0, 1.0))
+        booked_cost = sum(m.est_unhidden_cost for m in plan.moves)
+        # nothing booked -> the stall ratio is unattributable; stay put
+        mult_move = (self._iter_stall_s / booked_cost
+                     if booked_cost > 1e-12 else 1.0)
+        new_cf = perfmodel.fold_online(
+            self.cf, gain_bw=mult_bw, gain_lat=mult_lat, move=mult_move,
+            blend=self.config.calibration_blend,
+            note=f"iter{self._iteration}")
+        if new_cf is self.cf:
+            return
+        if self._cal_snapshot is None:
+            self._cal_snapshot = copy.deepcopy(self.profiler.__dict__)
+        self._cal_rounds_left -= 1
+        self.n_recalibrations += 1
+        self.cf = new_cf
+        self.planner.cf = new_cf
+        self._cf_dirty = True
+        self._build_plan(recalibration=True)
+
+    def _restore_plan(self, plan: PlacementPlan) -> None:
+        """Re-enact a previously measured plan from the live tier state.
+
+        The plan's recurring schedule encodes its phase-to-phase rotation,
+        and move issue is idempotent (an object already at its destination
+        is skipped), so resuming the schedule is sound once the tier state
+        is reconciled to the plan's iteration-start residency: corrective
+        fetches bring missing residents in, corrective evictions push out
+        stragglers the excursion left behind (without them the restored
+        plan would silently enjoy more than its capacity-checked budget).
+        The correctives are enacted *once*, through a throwaway copy of the
+        plan, and the session keeps the pristine plan: the mover replays
+        ``plan.moves`` every iteration, so a corrective baked into the
+        standing plan would recur — evicting an object the plan re-fetches
+        mid-iteration each time around, a permanent thrash cycle the plan
+        never asked for.  ``est_unhidden_cost`` stays 0 because they are
+        one-time reconciliation moves, not per-iteration plan cost."""
+        assert self.graph is not None
+        want0 = plan.residents[0] if plan.residents else set()
+        corrective: List[MoveOp] = []
+        for obj in self.registry:
+            if obj.pinned:
+                continue
+            if obj.name in want0:
+                if obj.tier != "fast":
+                    corrective.append(
+                        MoveOp(obj.name, "fast", 0, 0, obj.size_bytes))
+            elif obj.tier == "fast":
+                corrective.append(
+                    MoveOp(obj.name, "slow", 0, 0, obj.size_bytes))
+        enact = plan
+        if corrective:
+            enact = dataclasses.replace(
+                plan, moves=list(plan.moves) + corrective,
+                schedule=(list(plan.schedule) + emit_schedule(
+                    corrective, self.graph, self.machine.copy_bw)
+                    if plan.schedule else []))
+        self.plan = plan
+        self._drift_scope = None
+        self._measure_pending = True
+        self._plan_n_phases = len(self._phase_names)
+        self._baseline_pending = True
+        self.monitor.consume_events()
+        if self.mover is not None:
+            if hasattr(self.mover, "load_plan"):
+                self.mover.load_plan(enact, self.graph)
+            self.mover.on_phase_start(enact, 0, self._plan_n_phases)
 
     def _reprofile(self) -> None:
         """Drift response.  Incremental (default): keep serving the current
@@ -615,4 +866,10 @@ class Session:
             n_objects=len(self.registry),
             n_replans=self.n_replans,
             n_incremental_replans=self.n_incremental_replans,
+            measured_iteration_time=self.last_measured_iteration_time,
+            pred_err=self.last_pred_err,
+            cf_bw=self.cf.cf_bw,
+            cf_lat=self.cf.cf_lat,
+            cf_move=self.cf.cf_move,
+            n_recalibrations=self.n_recalibrations,
         )

@@ -1,0 +1,258 @@
+"""Calibration feedback: per-class online CF folds, the best-of-measured
+plan revert, priced global moves, and the interval-guidance policy.
+
+The behavioral contract under test (PR 6):
+
+* with ``calibrate_feedback`` off (the default) nothing changes — plans are
+  bit-identical to the PR 5 pipeline (pinned separately in
+  ``test_histogram.py``'s PR4 goldens) and the constants never mutate;
+* with feedback on, a kept fold must have *measured* better, and a fold
+  trajectory that measures worse is reverted to the epoch's best-measured
+  plan — so feedback-on can never end meaningfully worse than feedback-off
+  on any scenario (the chooser-honesty property);
+* ``plan_global`` emits priced moves (no free global migrations);
+* the interval policy is a registered third ablation arm.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (PAPER_DRAM_NVM, RuntimeConfig, UnimemRuntime,
+                        calibrate)
+from repro.core import perfmodel
+from repro.core.data_objects import ObjectRegistry
+from repro.core.monitor import DriftEvent
+from repro.core.perfmodel import CalibrationConstants
+from repro.core.phase import PhaseTraceEvent, build_phase_graph
+from repro.core.planner import Planner
+from repro.core.policy import available_policies
+from repro.core.profiler import PhaseProfiler
+from repro.sim import (SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS,
+                       SimulationEngine)
+
+MB = 1024 ** 2
+MACHINE = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+CF = calibrate(MACHINE)
+
+ALL_SCENARIOS = dict(SCENARIO_WORKLOADS)
+ALL_SCENARIOS.update(SKEWED_SCENARIO_WORKLOADS)
+
+
+def _run(wl, *, iters: int = 12, **cfg_kw):
+    rt = UnimemRuntime(
+        MACHINE, RuntimeConfig(fast_capacity_bytes=256 * MB,
+                               drift_threshold=10.0, **cfg_kw), cf=CF)
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    res = SimulationEngine(MACHINE, wl, runtime=rt).run(iters)
+    return res, rt
+
+
+# ---------------------------------------------------------------------------
+# solve_gain_folds: the per-class least-squares identification
+# ---------------------------------------------------------------------------
+def test_solve_gain_folds_recovers_per_class_multipliers():
+    a_true, b_true = 0.9, 0.3     # lat over-credits 3x, bw nearly honest
+    rows = [(g_bw, g_lat, a_true * g_bw + b_true * g_lat)
+            for g_bw, g_lat in [(0.2, 0.05), (0.1, 0.2), (0.0, 0.15),
+                                (0.3, 0.0), (0.12, 0.12)]]
+    a, b = perfmodel.solve_gain_folds(rows)
+    # ridge pulls toward 1.0, so allow a visible but bounded bias
+    assert abs(a - a_true) < 0.1
+    assert abs(b - b_true) < 0.1
+
+
+def test_solve_gain_folds_single_class_pins_only_that_class():
+    rows = [(g, 0.0, 0.5 * g) for g in (0.1, 0.2, 0.3)]
+    a, b = perfmodel.solve_gain_folds(rows)
+    assert abs(a - 0.5) < 0.1
+    assert abs(b - 1.0) < 1e-9    # nobody booked lat: the prior holds it
+
+
+def test_solve_gain_folds_degenerate_is_neutral():
+    assert perfmodel.solve_gain_folds([]) == (1.0, 1.0)
+    assert perfmodel.solve_gain_folds([(0.0, 0.0, 0.4)]) == (1.0, 1.0)
+
+
+def test_solve_gain_folds_clips_to_bounds():
+    rows = [(0.001, 0.0, 10.0)]   # implies a ~10000x multiplier
+    a, _ = perfmodel.solve_gain_folds(rows)
+    assert a <= 20.0
+    rows = [(10.0, 0.0, -100.0)]  # implies a negative multiplier
+    a, _ = perfmodel.solve_gain_folds(rows)
+    assert a >= 0.05
+
+
+# ---------------------------------------------------------------------------
+# fold_online: multiplicative, bitwise-neutral at 1.0, audited
+# ---------------------------------------------------------------------------
+def test_fold_online_neutral_is_the_same_object():
+    cf = CalibrationConstants(cf_bw=1.3, cf_lat=0.7, cf_move=0.9)
+    assert perfmodel.fold_online(cf) is cf
+    assert perfmodel.fold_online(cf, gain_bw=1.0, gain_lat=1.0,
+                                 move=1.0) is cf
+
+
+def test_fold_online_blend_and_provenance():
+    cf = CalibrationConstants()
+    out = perfmodel.fold_online(cf, gain_lat=0.5, blend=0.5, note="iter3")
+    assert out.cf_lat == pytest.approx(0.75)   # halfway toward 0.5
+    assert out.cf_bw == 1.0 and out.cf_move == 1.0
+    assert len(out.provenance) == 1
+    assert out.provenance[0].startswith("online(")
+    assert "iter3" in out.provenance[0]
+
+
+def test_fold_online_clips_cumulative_move_price():
+    cf = CalibrationConstants(cf_move=0.1)
+    out = perfmodel.fold_online(cf, move=0.01)
+    assert out.cf_move == 0.05                 # cumulative floor
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: drift ratio on zero baseline, audited calibrate fallback
+# ---------------------------------------------------------------------------
+def test_drift_ratio_neutral_on_zero_baseline():
+    assert DriftEvent(0, 0.0, 5.0).ratio == 1.0
+    assert DriftEvent(0, -1.0, 5.0).ratio == 1.0
+    assert DriftEvent(0, 2.0, 5.0).ratio == pytest.approx(2.5)
+
+
+def test_cf_ratio_degenerate_denominator_warns_and_audits():
+    with pytest.warns(RuntimeWarning, match="degenerate predicted"):
+        cf, prov = perfmodel._cf_ratio(1.0, 0.0, "cf_bw")
+    assert cf == 1.0
+    assert prov.startswith("cf_bw:fallback")
+
+
+def test_calibrate_provenance_is_measured_on_a_real_machine():
+    assert all(p.endswith(":measured") for p in CF.provenance)
+
+
+# ---------------------------------------------------------------------------
+# plan_global emits priced moves
+# ---------------------------------------------------------------------------
+def test_global_plan_moves_are_priced():
+    reg = ObjectRegistry()
+    sizes = {f"o{i}": 48 * MB for i in range(6)}
+    for n, s in sizes.items():
+        reg.alloc(n, s)
+    refs = [{f"o{i}": 4e7 for i in range(6)} for _ in range(3)]
+    times = [0.004, 0.004, 0.004]    # tiny windows: copies cannot hide
+    graph = build_phase_graph(
+        [(f"p{i}", r) for i, r in enumerate(refs)], times=times)
+    prof = PhaseProfiler(MACHINE, seed=0)
+    for i, r in enumerate(refs):
+        prof.observe(PhaseTraceEvent(i, times[i], dict(r)))
+    prof.annotate_graph(graph)
+    planner = Planner(MACHINE, reg, CalibrationConstants(), 100 * MB)
+    plan = planner.plan_global(graph, prof)
+    assert plan.moves, "expected the global search to migrate something"
+    assert any(m.est_unhidden_cost > 0.0 for m in plan.moves)
+    # and the chooser sees that cost: predicted is not benefit-only
+    benefit_only = plan.baseline_iteration_time - sum(
+        m.est_benefit for m in plan.moves)
+    assert plan.predicted_iteration_time >= benefit_only - 1e-12
+
+
+def test_cf_move_scales_movement_price():
+    reg = ObjectRegistry()
+    reg.alloc("a", 64 * MB)
+    cheap = Planner(MACHINE, reg, CalibrationConstants(cf_move=0.5),
+                    256 * MB)
+    dear = Planner(MACHINE, reg, CalibrationConstants(cf_move=2.0),
+                   256 * MB)
+    assert dear.price_eviction(64 * MB) == pytest.approx(
+        4.0 * cheap.price_eviction(64 * MB))
+
+
+# ---------------------------------------------------------------------------
+# the chooser-honesty property across the scenario matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(ALL_SCENARIOS))
+def test_feedback_never_ends_worse(name):
+    """Calibration feedback is measurement-guarded: every kept fold
+    measured better, every worsening trajectory is reverted to the
+    epoch's best-measured plan — so feedback-on steady time can never be
+    meaningfully worse than feedback-off, on any scenario."""
+    wl = ALL_SCENARIOS[name]
+    off, _ = _run(wl())
+    on, rt = _run(wl(), calibrate_feedback=True)
+    assert (on.steady_iteration_time
+            <= off.steady_iteration_time * 1.01), (
+        f"{name}: feedback-on {on.steady_iteration_time:.4f} worse than "
+        f"feedback-off {off.steady_iteration_time:.4f}")
+    # a kept recalibration must leave an audited trail
+    if rt.cf is not CF:
+        assert any(p.startswith("online") for p in rt.cf.provenance)
+
+
+def test_feedback_off_never_touches_the_constants():
+    _, rt = _run(SCENARIO_WORKLOADS["fsdp_buckets"]())
+    assert rt.cf is CF
+    assert rt.stats()["n_recalibrations"] == 0
+
+
+def test_fsdp_feedback_closes_the_lru_gap():
+    """The PR's acceptance row: with calibration feedback on, unimem's
+    fsdp_buckets steady time is at least LRU-ablation parity (the
+    uncalibrated model books latency-class benefits ~14x optimistic and
+    movement ~2.4x pessimistic, so it plans essentially no moves)."""
+    wl = SCENARIO_WORKLOADS["fsdp_buckets"]
+    on, rt = _run(wl(), calibrate_feedback=True)
+    lru, _ = _run(wl(), policy="lru")
+    assert on.steady_iteration_time <= lru.steady_iteration_time
+    assert rt.stats()["n_recalibrations"] >= 1
+    # and the kept model is honest about it
+    assert rt.last_pred_err is not None and rt.last_pred_err <= 0.2
+
+
+def test_worsening_fold_is_reverted_to_best_measured_plan():
+    """paged_serving's uncalibrated plan predicts ~0 (over-credited) but
+    *runs* near-optimal; the feedback's fold makes it measurably worse,
+    so the epoch must revert — restoring the best-measured plan, not
+    re-solving (a re-solve from the excursion's mutated tier state is a
+    placement-lock-in lottery)."""
+    wl = SKEWED_SCENARIO_WORKLOADS["paged_serving"]
+    off, _ = _run(wl())
+    on, rt = _run(wl(), calibrate_feedback=True)
+    assert any("online:revert" in p for p in rt.cf.provenance)
+    assert on.steady_iteration_time <= off.steady_iteration_time * 1.005
+    # tail iterations are bit-identical to the uncalibrated plan's steady
+    assert on.iteration_times[-1] == pytest.approx(
+        off.iteration_times[-1], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# interval-guidance policy (third ablation arm)
+# ---------------------------------------------------------------------------
+def test_interval_policy_is_registered():
+    assert {"unimem", "lru", "interval"} <= set(available_policies())
+
+
+@pytest.mark.parametrize("name", ["moe_churn", "kv_serving_skew"])
+def test_interval_policy_builds_capacity_safe_priced_plans(name):
+    res, rt = _run(ALL_SCENARIOS[name](), policy="interval")
+    plan = rt.plan
+    assert plan is not None and plan.strategy == "interval"
+    for residents in plan.residents:
+        assert sum(rt.registry[o].size_bytes
+                   for o in residents) <= 256 * MB
+    # demand moves are priced at their full boundary copy cost
+    assert plan.moves
+    for m in plan.moves:
+        assert m.est_unhidden_cost == pytest.approx(
+            m.size_bytes / MACHINE.copy_bw)
+    assert res.steady_iteration_time > 0
+
+
+def test_interval_decay_knob_changes_the_ranking():
+    wl = SCENARIO_WORKLOADS["moe_churn"]
+    _, short_mem = _run(wl(), policy="interval", interval_decay=0.05)
+    _, long_mem = _run(wl(), policy="interval", interval_decay=0.95)
+    p_short, p_long = short_mem.plan, long_mem.plan
+    assert (p_short.residents != p_long.residents
+            or len(p_short.moves) != len(p_long.moves))
