@@ -25,6 +25,9 @@ from .common import (DEFAULT_DRAM, MB, run_static, run_unimem, run_xmen)
 ROWS = []
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
 SAVE_RESULTS = False            # set by --save: refresh the committed CSVs
+SCENARIO_FILTER = None          # set by --scenario: substring workload filter
+CHAOS_SEED = 42                 # fixed seed: the committed chaos rows are
+                                # a deterministic fault replay, not a sample
 
 
 def emit(name: str, us: float, derived: str) -> None:
@@ -33,13 +36,27 @@ def emit(name: str, us: float, derived: str) -> None:
     print(row, flush=True)
 
 
-def write_rows(filename: str, prefix: str) -> None:
+def _scenario_selected(wl_name: str) -> bool:
+    return SCENARIO_FILTER is None or SCENARIO_FILTER in wl_name
+
+
+def write_rows(filename: str, prefix: str, must_contain: str = None,
+               exclude: str = None) -> None:
     """With ``--save``, commit this run's rows matching ``prefix`` to
     results/<filename> (the nightly-regression baselines); default runs
-    only print, so a casual local run never rewrites the committed CSVs."""
+    only print, so a casual local run never rewrites the committed CSVs.
+    ``must_contain``/``exclude`` split row families sharing a prefix
+    (``scenario_*_chaos`` goes to chaos.csv, everything else to
+    scenarios.csv)."""
     if not SAVE_RESULTS:
         return
-    rows = [r for r in ROWS if r.startswith(prefix)]
+    if SCENARIO_FILTER is not None:
+        print(f"# --scenario filter active: not rewriting {filename}",
+              flush=True)
+        return
+    rows = [r for r in ROWS if r.startswith(prefix)
+            and (must_contain is None or must_contain in r.split(",", 1)[0])
+            and (exclude is None or exclude not in r.split(",", 1)[0])]
     if not rows:
         return
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
@@ -231,6 +248,8 @@ def bench_scenarios() -> None:
     plan — the comparison isolates the migration engine."""
     mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
     for wl_name, make in SCENARIO_WORKLOADS.items():
+        if not _scenario_selected(wl_name):
+            continue
         wl = make()
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
@@ -262,6 +281,8 @@ def bench_scenarios() -> None:
     # partitioning, chunk_aware=True) vs PR 1's uniform-attribution slack
     # engine (chunk_aware=False) — both on the slack mover, same machine.
     for wl_name, make in SKEWED_SCENARIO_WORKLOADS.items():
+        if not _scenario_selected(wl_name):
+            continue
         wl = make()
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
@@ -301,6 +322,8 @@ def bench_scenarios() -> None:
          lambda: kv_serving_skewed(sub=16, window=4, taper=0.4)),
     )
     for wl_name, make in mr_scenarios:
+        if not _scenario_selected(wl_name):
+            continue
         wl = make()
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
@@ -346,6 +369,8 @@ def bench_scenarios() -> None:
     # reverted epoch keeps the uncalibrated prediction, err ~1.0).
     for wl_name, make in {**SCENARIO_WORKLOADS,
                           **SKEWED_SCENARIO_WORKLOADS}.items():
+        if not _scenario_selected(wl_name):
+            continue
         wl = make()
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
@@ -374,6 +399,8 @@ def bench_scenarios() -> None:
     # a real speedup over NVM-only or the gate fails loudly.
     for wl_name, make in {**SCENARIO_WORKLOADS,
                           **SKEWED_SCENARIO_WORKLOADS}.items():
+        if not _scenario_selected(wl_name):
+            continue
         wl = make()
         t0 = time.perf_counter()
         dram = run_static(mach, wl, "fast")
@@ -390,7 +417,47 @@ def bench_scenarios() -> None:
              f"vs_nvm="
              f"{nvm.steady_iteration_time / itv.steady_iteration_time:.3f};"
              f"moves={len(irt.plan.moves) if irt.plan else 0}")
-    write_rows("scenarios.csv", "scenario_")
+    write_rows("scenarios.csv", "scenario_", exclude="_chaos")
+
+
+# --------------------------- chaos: the scenario matrix under fault injection
+def bench_chaos() -> None:
+    """The full scenario matrix re-run under the gated chaos profile (5%
+    transient start failures + one 8x straggler channel, fixed seed — a
+    deterministic fault replay, not a sample).  Each row reports the
+    degraded-mode slack engine against its own fault-free run
+    (``vs_faultfree``, nightly floor 0.85): retries, degraded serves,
+    rollbacks and straggler reissues absorb the faults, the channel
+    health machine quarantines the straggler channel, and the post-run
+    tier audit must stay violation-free (``audit_violations`` counts
+    in-run audit violations plus any final-state divergence; the nightly
+    ceiling pins it to zero)."""
+    from repro.sim.workloads import chaos_gated_spec
+
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+    for wl_name, make in {**SCENARIO_WORKLOADS,
+                          **SKEWED_SCENARIO_WORKLOADS}.items():
+        if not _scenario_selected(wl_name):
+            continue
+        wl = make()
+        t0 = time.perf_counter()
+        base, _ = run_unimem(mach, wl, mover="slack", drift_threshold=10.0)
+        chaos, rt = run_unimem(mach, wl, mover="slack", drift_threshold=10.0,
+                               fault_spec=chaos_gated_spec(seed=CHAOS_SEED))
+        us = (time.perf_counter() - t0) * 1e6
+        s = rt.stats()
+        audit = rt.audit_tiers(heal=False)     # final-state reconciliation
+        health = s["channel_health"]
+        emit(f"scenario_{wl_name}_chaos", us,
+             f"vs_faultfree={base.steady_iteration_time / chaos.steady_iteration_time:.3f};"
+             f"audit_violations={s['n_audit_violations'] + len(audit.violations)};"
+             f"retries={s['n_retries']};"
+             f"degraded={s['n_degraded_serves']};"
+             f"rollbacks={s['n_eviction_rollbacks']};"
+             f"reissues={s['n_straggler_reissues']};"
+             f"quarantined="
+             f"{sum(1 for v in health.values() if v == 'quarantined')}")
+    write_rows("chaos.csv", "scenario_", must_contain="_chaos")
 
 
 # ------------------------------ planner latency: vectorized vs pre-PR path
@@ -559,20 +626,26 @@ BENCHES = {
     "fig13": bench_dram_size,
     "lm_tiering": bench_lm_tiering,
     "scenarios": bench_scenarios,
+    "chaos": bench_chaos,
     "planner": bench_planner,
     "kernels": bench_kernels,
 }
 
 
 def main() -> None:
-    global SAVE_RESULTS
+    global SAVE_RESULTS, SCENARIO_FILTER
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--scenario", default=None,
+                    help="substring filter on scenario workload names "
+                         "(scenarios/chaos benches); filtered runs never "
+                         "rewrite the committed CSVs")
     ap.add_argument("--save", action="store_true",
                     help="rewrite the committed baseline CSVs under "
                          "benchmarks/results/ with this run")
     args = ap.parse_args()
     SAVE_RESULTS = args.save
+    SCENARIO_FILTER = args.scenario
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:

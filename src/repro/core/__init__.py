@@ -3,6 +3,9 @@ contribution, adapted to TPU memory tiers)."""
 
 from .backends import available_backends, make_backend, register_backend
 from .data_objects import DataObject, ObjectRegistry
+from .faults import (ChannelHealth, ChaosBackend, CopyError, CopyFailedError,
+                     CopyTimeoutError, DegradedServe, EvictionRollback,
+                     FaultSpec, TransientCopyError)
 from .histogram import Histogram, uniform_mass
 from .instrumentation import (InstrumentationSource, ManualSource,
                               PhaseSample, XlaCostAnalysisSource)
@@ -22,7 +25,7 @@ from .policy import (PipelineState, PlacementPolicy, PlanProgram,
                      make_policy, register_policy)
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
-from .session import PhaseContext, Session
+from .session import PhaseContext, Session, TierAudit
 from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
                     STT_RAM, PCRAM, RERAM, TPU_V5E, TPU_V5E_VMEM,
                     V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
@@ -35,7 +38,10 @@ __all__ = [
     "ChannelSimBackend", "SlackAwareMover", "MoveRecord",
     "available_backends", "make_backend", "register_backend",
     "InstrumentationSource", "ManualSource", "PhaseSample",
-    "XlaCostAnalysisSource", "Session", "PhaseContext",
+    "XlaCostAnalysisSource", "Session", "PhaseContext", "TierAudit",
+    "ChannelHealth", "ChaosBackend", "CopyError", "CopyFailedError",
+    "CopyTimeoutError", "DegradedServe", "EvictionRollback", "FaultSpec",
+    "TransientCopyError",
     "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
     "consumed_bandwidth", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",

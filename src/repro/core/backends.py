@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List
 
+from .faults import ChaosBackend, FaultSpec
 from .mover import (AsyncJaxTierBackend, ChannelSimBackend, CpuPoolBackend,
                     JaxTierBackend, SimTierBackend)
 from .tiers import MachineProfile
@@ -75,7 +76,21 @@ def _cpu_pool_factory(machine: MachineProfile, *, pool_workers: int = 2,
     return CpuPoolBackend(machine, workers=pool_workers)
 
 
+def _chaos_factory(machine: MachineProfile, *, chaos_inner: str = "jax_async",
+                   fault_spec=None, **options: Any):
+    """Fault-injecting decorator over any registered backend:
+    ``make_backend("chaos", machine, chaos_inner="sim", fault_spec=spec)``
+    wraps the inner backend in :class:`~.faults.ChaosBackend`.  With no
+    ``fault_spec`` the wrapper injects nothing (a pass-through useful for
+    testing the decorator plumbing itself)."""
+    if chaos_inner == "chaos":
+        raise ValueError("chaos backend cannot wrap itself")
+    inner = make_backend(chaos_inner, machine, **options)
+    return ChaosBackend(inner, fault_spec or FaultSpec())
+
+
 register_backend("sim", _sim_factory)
 register_backend("jax", lambda machine, **_: JaxTierBackend(machine))
 register_backend("jax_async", lambda machine, **_: AsyncJaxTierBackend(machine))
 register_backend("cpu_pool", _cpu_pool_factory)
+register_backend("chaos", _chaos_factory)

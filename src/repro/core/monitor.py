@@ -43,15 +43,22 @@ class VariationMonitor:
         self._baseline[phase_index] = time_s
         self._strikes[phase_index] = 0
 
-    def observe(self, phase_index: int, time_s: float) -> Optional[DriftEvent]:
-        """Returns a DriftEvent when re-profiling should be triggered."""
+    def observe(self, phase_index: int, time_s: float,
+                faulted: bool = False) -> Optional[DriftEvent]:
+        """Returns a DriftEvent when re-profiling should be triggered.
+
+        ``faulted`` marks an execution slowed by a *confirmed* fault (a
+        degraded slow-tier serve) rather than by noise: the debounce is
+        bypassed, so a threshold-exceeding slowdown fires immediately and
+        the next replan re-prices the undeliverable move."""
         base = self._baseline.get(phase_index)
         if base is None or base <= 0:
             self._baseline[phase_index] = time_s
             return None
         drift = abs(time_s - base) / base
         if drift > self.threshold:
-            self._strikes[phase_index] = self._strikes.get(phase_index, 0) + 1
+            self._strikes[phase_index] = (self._strikes.get(phase_index, 0)
+                                          + (self.patience if faulted else 1))
             if self._strikes[phase_index] >= self.patience:
                 ev = DriftEvent(phase_index, base, time_s)
                 self.events.append(ev)

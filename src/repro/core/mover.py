@@ -37,11 +37,46 @@ backend:
   chunks are read from the fast tier while later chunks are still in flight
   (double buffering).  Fence stalls appear only when slack is truly
   exhausted.
+
+**The backend contract** (duck-typed; :class:`TierBackend` is the minimal
+protocol):
+
+* ``start_move(obj, dst) -> handle`` issues one asynchronous copy.  It may
+  raise :class:`~.faults.TransientCopyError` — the movers retry with
+  exponential backoff bounded by the move's slack deadline.  Optional
+  keywords: ``after=`` chains the copy behind a predecessor handle,
+  ``avoid=`` is a set of channels the chooser must skip (quarantined
+  channels; see :class:`~.faults.ChannelHealth`).
+* ``wait(handle, timeout=None)`` is the **bounded-wait contract**: with a
+  timeout it must raise :class:`~.faults.CopyTimeoutError` instead of
+  blocking past the bound (simulated backends compare the remaining
+  virtual stall against the timeout; real backends poll readiness against
+  a wall-clock deadline).  With ``timeout=None`` the legacy blocking
+  behavior is preserved.  ``wait``/``complete`` raise
+  :class:`~.faults.CopyFailedError` for a copy that errored at land time —
+  the tier never flips, so a failed eviction's residency rolls back and a
+  failed fetch demotes to slow-tier service.
+* Backends with in-flight semantics additionally expose ``settle(now)``
+  (land finished copies without blocking), ``complete(handle)``,
+  ``is_done(handle)``, and optionally ``cancel(handle)`` (abort an
+  in-flight copy without a tier flip — straggler reissue and deadline
+  abandonment need it).
+
+Failure handling lives in the movers (not the session): per-move retry
+with slack-bounded exponential backoff, straggler detection
+(in-flight time exceeding ``straggler_factor`` times the priced copy
+time) with cancel-and-reissue on a different channel, a per-channel
+health state machine feeding the channel chooser, and demotion of
+undeliverable fetches to :class:`~.faults.DegradedServe` events the
+session logs and the monitor treats as drift.  All of it is inert
+without injected faults: the retry loop runs ``start_move`` once, the
+health machine stays empty, and traces are bitwise identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time as _time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Protocol
@@ -49,14 +84,21 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Protocol
 import jax
 
 from .data_objects import DataObject, ObjectRegistry
+from .faults import (ChannelHealth, CopyError, CopyTimeoutError,
+                     DegradedServe, EvictionRollback, TransientCopyError)
 from .phase import PhaseGraph
 from .planner import MoveOp, PlacementPlan, ScheduledMove
 from .tiers import MachineProfile
 
 
 class TierBackend(Protocol):
+    """Minimal copy-backend protocol (full contract in the module
+    docstring): ``wait`` honors the bounded-wait contract — with a
+    ``timeout`` it raises :class:`~.faults.CopyTimeoutError` instead of
+    blocking past the bound."""
+
     def start_move(self, obj: DataObject, dst: str) -> Any: ...
-    def wait(self, handle: Any) -> None: ...
+    def wait(self, handle: Any, timeout: Optional[float] = None) -> Any: ...
 
 
 # ---------------------------------------------------------------------------
@@ -87,10 +129,30 @@ class JaxTierBackend:
         obj.tier = dst
         return moved
 
-    def wait(self, handle: Any) -> None:
-        if handle:
-            for leaf in handle:
+    @staticmethod
+    def _wait_leaves(leaves, timeout: Optional[float], what: str) -> None:
+        """Fence leaves; with a timeout, poll readiness against a
+        wall-clock deadline instead of blocking (bounded-wait contract)."""
+        if timeout is None:
+            for leaf in leaves:
                 leaf.block_until_ready()
+            return
+        deadline = _time.monotonic() + timeout
+        pending = list(leaves)
+        while True:
+            pending = [l for l in pending
+                       if not getattr(l, "is_ready", lambda: True)()]
+            if not pending:
+                return
+            if _time.monotonic() >= deadline:
+                raise CopyTimeoutError(
+                    f"{what}: {len(pending)} leaves still not ready after "
+                    f"{timeout:.3f}s")
+            _time.sleep(min(1e-3, timeout / 10))
+
+    def wait(self, handle: Any, timeout: Optional[float] = None) -> None:
+        if handle:
+            self._wait_leaves(handle, timeout, "device_put fence")
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +223,11 @@ class AsyncJaxTierBackend(JaxTierBackend):
         except ValueError:
             pass
 
-    def wait(self, handle: Optional[_AsyncJaxCopy]) -> float:
+    def wait(self, handle: Optional[_AsyncJaxCopy],
+             timeout: Optional[float] = None) -> float:
         if handle is not None:
-            for leaf in handle.leaves:
-                leaf.block_until_ready()
+            self._wait_leaves(handle.leaves, timeout,
+                              f"async copy of {handle.obj.name}")
             self._land(handle)
         return 0.0              # real backend: the fence blocked, no stall
 
@@ -230,6 +293,8 @@ class CpuPoolBackend:
 
     def start_move(self, obj: DataObject, dst: str,
                    after: Optional[_PoolCopy] = None) -> Optional[_PoolCopy]:
+        if self._pool is None:
+            raise RuntimeError("CpuPoolBackend is shut down")
         if obj.payload is None:
             obj.tier = dst              # logical object: nothing to copy
             return None
@@ -252,9 +317,16 @@ class CpuPoolBackend:
         except ValueError:
             pass
 
-    def wait(self, handle: Optional[_PoolCopy]) -> float:
+    def wait(self, handle: Optional[_PoolCopy],
+             timeout: Optional[float] = None) -> float:
         if handle is not None:
-            handle.future.result()
+            import concurrent.futures
+            try:
+                handle.future.result(timeout=timeout)
+            except concurrent.futures.TimeoutError:
+                raise CopyTimeoutError(
+                    f"pool copy of {handle.obj.name} still running after "
+                    f"{timeout:.3f}s") from None
             self._land(handle)
         return 0.0                      # real backend: the fence blocked
 
@@ -271,17 +343,24 @@ class CpuPoolBackend:
             if h.future.done():
                 self._land(h)
 
-    def shutdown(self) -> None:
-        self._pool.shutdown(wait=True)
+    def shutdown(self, wait: bool = True) -> None:
+        """Idempotent teardown: the first call releases the worker pool,
+        every later call (including del-after-shutdown) is a no-op.
+        Errors surface to the caller — only ``__del__`` swallows them,
+        and only because interpreter teardown may have already torn down
+        the executor machinery underneath us."""
+        pool, self._pool = getattr(self, "_pool", None), None
+        if pool is not None:
+            pool.shutdown(wait=wait)
 
     def __del__(self):
         # sessions resolve backends through the registry and have no
         # teardown hook; without this, every discarded session would leak
         # its idle worker threads until interpreter exit
         try:
-            self._pool.shutdown(wait=False)
+            self.shutdown(wait=False)
         except Exception:
-            pass
+            pass    # interpreter-exit race: executor already dismantled
 
 
 # ---------------------------------------------------------------------------
@@ -321,9 +400,16 @@ class SimTierBackend:
         obj.tier = dst
         return c
 
-    def wait(self, handle: _SimCopy) -> float:
-        """Returns the stall (seconds past ``now``) the fence must absorb."""
-        return max(0.0, handle.done - self.now_fn())
+    def wait(self, handle: _SimCopy, timeout: Optional[float] = None) -> float:
+        """Returns the stall (seconds past ``now``) the fence must absorb.
+        With a ``timeout``, a copy that would stall past the bound raises
+        instead (virtual-time bounded-wait semantics)."""
+        stall = max(0.0, handle.done - self.now_fn())
+        if timeout is not None and stall > timeout:
+            raise CopyTimeoutError(
+                f"sim copy of {handle.obj} needs {stall:.4f}s "
+                f"> timeout {timeout:.4f}s")
+        return stall
 
 
 # ---------------------------------------------------------------------------
@@ -396,10 +482,13 @@ class ChannelSimBackend:
         obj.tier = dst
 
     def start_move(self, obj: DataObject, dst: str,
-                   after: Optional[_ChannelCopy] = None) -> _ChannelCopy:
+                   after: Optional[_ChannelCopy] = None,
+                   avoid: Optional[set] = None) -> _ChannelCopy:
         """Issue a copy on the earliest-free channel.  ``after`` delays the
         start until another copy lands (eviction -> incoming chaining: the
-        incoming copy cannot begin until its space is free).
+        incoming copy cannot begin until its space is free).  ``avoid``
+        names channels the chooser must skip (quarantined by the mover's
+        health machine) — ignored when it would leave no channel at all.
 
         Contention: copies active while this one starts are re-rated to the
         equal share ``copy_bw / n`` (their completed bytes are preserved and
@@ -410,6 +499,10 @@ class ChannelSimBackend:
         # bulk demotions are confined to the minimum-priority channels;
         # fetches pick the earliest-free channel of any class
         allowed = self._bulk_channels if dst == "slow" else range(self.channels)
+        if avoid:
+            healthy = [c for c in allowed if c not in avoid]
+            if healthy:
+                allowed = healthy
         ch = min(allowed, key=lambda c: self._free_at[c])
         start = max(now, self._free_at[ch])
         if after is not None:
@@ -444,9 +537,32 @@ class ChannelSimBackend:
                 c.done += delta
         self._free_at[ch] += delta
 
-    def wait(self, handle: _ChannelCopy) -> float:
-        """Stall (seconds past ``now``) a fence on this copy must absorb."""
-        return max(0.0, handle.done - self.now_fn())
+    def wait(self, handle: _ChannelCopy,
+             timeout: Optional[float] = None) -> float:
+        """Stall (seconds past ``now``) a fence on this copy must absorb.
+        With a ``timeout``, a copy that would stall past the bound raises
+        instead (virtual-time bounded-wait semantics; a stuck handle's
+        infinite stall always raises)."""
+        stall = max(0.0, handle.done - self.now_fn())
+        if timeout is not None and stall > timeout:
+            raise CopyTimeoutError(
+                f"channel copy of {handle.obj.name} needs {stall:.4f}s "
+                f"> timeout {timeout:.4f}s")
+        return stall
+
+    def cancel(self, handle: _ChannelCopy) -> bool:
+        """Abort an in-flight copy: retired without a tier flip.  If the
+        copy was its channel's tail (including a stuck copy wedging the
+        channel at +inf), the channel frees immediately — this is how the
+        mover un-wedges a quarantined channel."""
+        if handle.landed:
+            return False
+        handle.landed = True
+        aborted_at = max(self.now_fn(), handle.start)
+        if self._free_at[handle.channel] <= handle.done:
+            self._free_at[handle.channel] = aborted_at
+        handle.done = aborted_at    # occupied the channel until aborted
+        return True
 
     def complete(self, handle: _ChannelCopy) -> None:
         """Mark the copy landed (the caller absorbed any remaining stall).
@@ -510,6 +626,11 @@ class MoveStats:
     moved_bytes: int = 0
     fence_stall_s: float = 0.0
     overlapped_moves: int = 0
+    # fault-tolerance counters (all zero on a fault-free run)
+    n_retries: int = 0              # transient start_move failures retried
+    n_degraded: int = 0             # fetches demoted to slow-tier service
+    n_failed_evictions: int = 0     # evictions rolled back (residency kept)
+    n_straggler_reissues: int = 0   # copies cancelled + reissued elsewhere
 
     @property
     def overlap_fraction(self) -> float:
@@ -524,12 +645,29 @@ class ProactiveMover:
       ``i`` (they run in the background toward their ``needed_by`` phase).
     """
 
-    def __init__(self, registry: ObjectRegistry, backend: TierBackend):
+    def __init__(self, registry: ObjectRegistry, backend: TierBackend,
+                 retry_limit: int = 3):
         self.registry = registry
         self.backend = backend
+        self.retry_limit = retry_limit
         self._inflight: Dict[str, Any] = {}     # obj -> handle
         self._queue: Deque[MoveOp] = deque()
         self.stats = MoveStats()
+        #: DegradedServe / EvictionRollback events, drained by the session
+        self.fault_events: List[Any] = []
+
+    def _fault(self, m: MoveOp, phase_index: int, reason: str,
+               channel: int = -1) -> None:
+        if m.dst == "slow":
+            self.stats.n_failed_evictions += 1
+            self.fault_events.append(EvictionRollback(
+                obj=m.obj, phase_index=phase_index, reason=reason,
+                channel=channel))
+        else:
+            self.stats.n_degraded += 1
+            self.fault_events.append(DegradedServe(
+                obj=m.obj, phase_index=phase_index, reason=reason,
+                channel=channel))
 
     def load_plan(self, plan: PlacementPlan, graph: Optional[PhaseGraph] = None
                   ) -> None:
@@ -550,7 +688,14 @@ class ProactiveMover:
         for m in plan.fences_for_phase(phase_index):
             h = self._inflight.pop(m.obj, None)
             if h is not None:
-                s = self.backend.wait(h)
+                try:
+                    s = self.backend.wait(h)
+                except CopyError:
+                    # the copy never delivered: a fetch serves slow this
+                    # iteration, a failed eviction keeps its residency
+                    self._fault(m, phase_index, "late_fail",
+                                getattr(h, "channel", -1))
+                    continue
                 if isinstance(s, (int, float)):
                     stall += float(s)
                     if s <= 0.0:
@@ -565,11 +710,18 @@ class ProactiveMover:
                 continue
             # dependency safety: never start moving an object the current
             # phase itself references unless the move is fenced right here.
-            h = self.backend.start_move(obj, m.dst)
+            h = self._start_with_retry(obj, m, phase_index)
+            if h is None and obj.tier != m.dst:
+                continue            # retries exhausted (fault recorded)
             self.stats.n_moves += 1
             self.stats.moved_bytes += m.size_bytes
             if m.needed_by == phase_index:
-                s = self.backend.wait(h)
+                try:
+                    s = self.backend.wait(h)
+                except CopyError:
+                    self._fault(m, phase_index, "late_fail",
+                                getattr(h, "channel", -1))
+                    continue
                 if isinstance(s, (int, float)):
                     stall += float(s)
                     if s <= 0.0:
@@ -580,9 +732,25 @@ class ProactiveMover:
                 self._inflight[m.obj] = h
         return stall
 
+    def _start_with_retry(self, obj: DataObject, m: MoveOp,
+                          phase_index: int) -> Optional[Any]:
+        attempts = 0
+        while True:
+            try:
+                return self.backend.start_move(obj, m.dst)
+            except TransientCopyError:
+                attempts += 1
+                if attempts > self.retry_limit:
+                    self._fault(m, phase_index, "retries_exhausted")
+                    return None
+                self.stats.n_retries += 1
+
     def drain(self) -> None:
         for obj, h in list(self._inflight.items()):
-            self.backend.wait(h)
+            try:
+                self.backend.wait(h)
+            except CopyError:
+                pass                # draining: the copy's fate is recorded
             del self._inflight[obj]
 
 
@@ -632,10 +800,22 @@ class SlackAwareMover:
     """
 
     def __init__(self, registry: ObjectRegistry, backend: TierBackend,
-                 graph: Optional[PhaseGraph] = None):
+                 graph: Optional[PhaseGraph] = None, retry_limit: int = 3,
+                 straggler_factor: Optional[float] = None):
         self.registry = registry
         self.backend = backend
         self.graph = graph
+        #: max transient-failure retries per move (beyond the slack bound)
+        self.retry_limit = retry_limit
+        #: in-flight copy exceeding ``straggler_factor`` x its priced time
+        #: is cancelled and reissued on another channel; the same factor
+        #: bounds fence waits (deadline abandonment).  ``None`` disables
+        #: both — the fault-free default (contention alone legitimately
+        #: slows sim copies by up to ``channels`` x).
+        self.straggler_factor = straggler_factor
+        self.health = ChannelHealth()
+        #: DegradedServe / EvictionRollback events, drained by the session
+        self.fault_events: List[Any] = []
         self._inflight: Dict[str, Any] = {}      # obj name -> handle
         self._records: Dict[str, MoveRecord] = {}  # obj name -> open record
         self.trace: List[MoveRecord] = []
@@ -671,6 +851,152 @@ class SlackAwareMover:
         if stall <= 1e-12:
             self.stats.overlapped_moves += 1
 
+    # ------------------------------------------------------------- fault paths
+    def _fault(self, obj: str, dst: str, phase_index: int, reason: str,
+               channel: int = -1, slack_s: float = 0.0) -> None:
+        """Record a failed move: an undeliverable fetch demotes to
+        slow-tier service (DegradedServe), a failed eviction keeps its
+        residency (EvictionRollback).  The session drains these."""
+        if dst == "slow":
+            self.stats.n_failed_evictions += 1
+            self.fault_events.append(EvictionRollback(
+                obj=obj, phase_index=phase_index, reason=reason,
+                channel=channel))
+        else:
+            self.stats.n_degraded += 1
+            self.fault_events.append(DegradedServe(
+                obj=obj, phase_index=phase_index, reason=reason,
+                channel=channel, slack_s=slack_s))
+
+    def _fail_inflight(self, name: str, h: Any, phase_index: int,
+                       reason: str, now: float) -> None:
+        """Retire a failed/abandoned in-flight copy: fault event, channel
+        strike, bookkeeping closed.  The tier never flipped, so the plan
+        replay (or next replan) naturally reissues the move."""
+        ch = getattr(h, "channel", -1)
+        self.health.record_fault(ch if isinstance(ch, int) else -1)
+        self._fault(name, getattr(h, "dst", "fast"), phase_index, reason,
+                    ch if isinstance(ch, int) else -1)
+        self._inflight.pop(name, None)
+        self._finish_record(name, now, 0.0)
+
+    def _deadline_for(self, size_bytes: int) -> Optional[float]:
+        """Max fence wait for a copy of this size (straggler_factor x its
+        priced full-bandwidth time); None = unbounded (fault-free mode)."""
+        if self.straggler_factor is None:
+            return None
+        bw = getattr(getattr(self.backend, "machine", None), "copy_bw", 0.0)
+        if not bw:
+            return None
+        return self.straggler_factor * (size_bytes / bw)
+
+    def _cancel(self, handle: Any) -> bool:
+        cancel = getattr(self.backend, "cancel", None)
+        return bool(cancel(handle)) if cancel is not None else False
+
+    @staticmethod
+    def _service_exceeded(h: Any, deadline: Optional[float]) -> bool:
+        """True when the copy's *service* time (channel occupancy) exceeds
+        the deadline.  Queue wait is excluded on purpose: a copy delayed
+        behind a long queue on a healthy channel is contention, not a
+        fault, and striking its channel would cascade into quarantining
+        the whole engine.  Non-finite times (a stuck handle, or a copy
+        queued behind one on a wedged channel) always exceed."""
+        if deadline is None:
+            return False
+        start, done = getattr(h, "start", None), getattr(h, "done", None)
+        if start is None or done is None:
+            return False
+        if not math.isfinite(done) or not math.isfinite(start):
+            return True
+        return (done - start) > deadline
+
+    def _start_move_raw(self, obj: DataObject, dst: str,
+                        after: Any = None, avoid: Optional[set] = None) -> Any:
+        try:
+            if avoid:
+                return self.backend.start_move(obj, dst, after=after,
+                                               avoid=avoid)
+            return self.backend.start_move(obj, dst, after=after)
+        except TypeError:       # backend without dependency chaining
+            return self.backend.start_move(obj, dst)
+
+    def _start_with_retry(self, entry: ScheduledMove, obj: DataObject,
+                          after: Any, now: float) -> Optional[Any]:
+        """Issue with exponential backoff on transient failures, bounded
+        by the move's slack (a retry that would already land the copy
+        late is pointless — demote instead) and by ``retry_limit``."""
+        m = entry.op
+        avoid = self.health.avoid()
+        b0 = max(1e-6, 0.1 * entry.duration_s)
+        budget = max(entry.slack_s, b0)     # always worth one retry
+        backoff, spent, attempts = b0, 0.0, 0
+        while True:
+            try:
+                return self._start_move_raw(obj, m.dst, after, avoid)
+            except TransientCopyError:
+                attempts += 1
+                spent += backoff
+                if attempts > self.retry_limit or spent > budget:
+                    self._fault(m.obj, m.dst, m.needed_by,
+                                "retries_exhausted", slack_s=entry.slack_s)
+                    return None
+                self.stats.n_retries += 1
+                backoff *= 2.0
+
+    def _sweep_failures(self, phase_index: int, now: float) -> None:
+        """Purge in-flight handles that late-failed (retired by the chaos
+        settle with no tier flip): record the fault and drop them so the
+        plan replay reissues instead of treating them as still pending."""
+        for name, h in list(self._inflight.items()):
+            if (getattr(h, "_chaos_fail", False)
+                    and getattr(h, "landed", False)):
+                self._fail_inflight(name, h, phase_index, "late_fail", now)
+
+    def _detect_stragglers(self, phase_index: int, now: float) -> None:
+        """Cancel-and-reissue copies stuck past their deadline: an
+        in-flight copy that has been running ``straggler_factor`` x its
+        priced time (including stuck handles at done=+inf) is aborted,
+        its channel struck, and the copy reissued avoiding that channel."""
+        f = self.straggler_factor
+        if f is None:
+            return
+        bw = getattr(getattr(self.backend, "machine", None), "copy_bw", 0.0)
+        if not bw:
+            return
+        for name, h in list(self._inflight.items()):
+            start, done = getattr(h, "start", None), getattr(h, "done", None)
+            if (start is None or done is None
+                    or getattr(h, "landed", False) or done <= now):
+                continue
+            priced = getattr(h, "size_bytes", 0) / bw
+            if now < start + f * priced:
+                continue
+            ch = getattr(h, "channel", -1)
+            if not self._cancel(h):
+                continue
+            self.health.record_fault(ch)
+            self.stats.n_straggler_reissues += 1
+            obj = self.registry[name] if name in self.registry else None
+            if obj is None:
+                self._inflight.pop(name, None)
+                self._finish_record(name, now, 0.0, superseded=True)
+                continue
+            avoid = {ch} | self.health.avoid()
+            try:
+                h2 = self._start_move_raw(obj, h.dst, None, avoid)
+            except CopyError:
+                self._fail_inflight(name, h, phase_index,
+                                    "straggler_reissue_failed", now)
+                continue
+            self._inflight[name] = h2
+            rec = self._records.get(name)
+            if rec is not None:
+                rec.channel = getattr(h2, "channel", rec.channel)
+                rec.start = getattr(h2, "start", rec.start)
+                d2 = self._done_of(h2)
+                rec.done = d2 if d2 is not None else rec.done
+
     # ------------------------------------------------------------------ fence
     def _fence(self, plan: PlacementPlan, phase_index: int,
                now: float) -> float:
@@ -701,8 +1027,14 @@ class SlackAwareMover:
                     landed = probe(h) if probe is not None else True
                 if landed:
                     self._inflight.pop(m.obj)
+                    try:
+                        self._complete(h)
+                    except CopyError:
+                        self._fail_inflight(m.obj, h, phase_index,
+                                            "late_fail", now)
+                        continue
                     self.stats.overlapped_moves += 1
-                    self._complete(h)
+                    self.health.record_success(getattr(h, "channel", -1))
                     self._finish_record(m.obj, now, 0.0)
                 continue
             self._inflight.pop(m.obj)
@@ -716,15 +1048,37 @@ class SlackAwareMover:
         for m, h in singles:
             done = self._done_of(h)
             if done is None:
-                # blocking backend (real arrays): the fence must block here
-                self.backend.wait(h)
+                # blocking backend (real arrays): the fence must block
+                # here — but never past the straggler deadline
+                try:
+                    self.backend.wait(h, timeout=self._deadline_for(
+                        m.size_bytes))
+                except TypeError:
+                    self.backend.wait(h)
+                except CopyError:
+                    self._cancel(h)
+                    self._fail_inflight(m.obj, h, phase_index,
+                                        "deadline", now)
+                    continue
                 s = 0.0
             else:
                 s = max(0.0, done - now)
+                if self._service_exceeded(h, self._deadline_for(m.size_bytes)):
+                    # stuck/straggling copy: abandon rather than deadlock;
+                    # the phase serves this object from the slow tier
+                    self._cancel(h)
+                    self._fail_inflight(m.obj, h, phase_index,
+                                        "deadline", now)
+                    continue
             # parallel channels: waiting on all fenced copies costs the max
             stall = max(stall, s)
             self._count_fence(s)
-            self._complete(h)
+            try:
+                self._complete(h)
+            except CopyError:
+                self._fail_inflight(m.obj, h, phase_index, "late_fail", now)
+                continue
+            self.health.record_success(getattr(h, "channel", -1))
             self._finish_record(m.obj, now, s)
 
         phase_est = (self.graph[phase_index].time
@@ -733,13 +1087,14 @@ class SlackAwareMover:
         extra_max = 0.0
         for parent, entries in groups.items():
             extra_max = max(extra_max,
-                            self._fence_chunks(parent, entries, t0, phase_est))
+                            self._fence_chunks(parent, entries, t0, phase_est,
+                                               phase_index))
         stall += extra_max
         self.stats.fence_stall_s += stall
         return stall
 
     def _fence_chunks(self, parent: str, entries: List[Any], t0: float,
-                      phase_est: float) -> float:
+                      phase_est: float, phase_index: int = 0) -> float:
         """Double-buffered consumption of one chunked object.
 
         Chunks are consumed in index order across the phase; chunk ``k``'s
@@ -759,13 +1114,34 @@ class SlackAwareMover:
             consume = t0 + extra + phase_est * (before[dob.name] / total)
             done = self._done_of(h)
             if done is None:
-                self.backend.wait(h)    # blocking backend: fence the chunk
+                try:    # blocking backend: fence the chunk (bounded)
+                    self.backend.wait(h, timeout=self._deadline_for(
+                        m.size_bytes))
+                except TypeError:
+                    self.backend.wait(h)
+                except CopyError:
+                    self._cancel(h)
+                    self._fail_inflight(m.obj, h, phase_index,
+                                        "deadline", consume)
+                    continue
                 late = 0.0
             else:
                 late = max(0.0, done - consume)
+                if self._service_exceeded(h, self._deadline_for(m.size_bytes)):
+                    # a stuck/straggling chunk: abandon, serve it slow
+                    self._cancel(h)
+                    self._fail_inflight(m.obj, h, phase_index,
+                                        "deadline", consume)
+                    continue
             extra += late
             self._count_fence(late)
-            self._complete(h)
+            try:
+                self._complete(h)
+            except CopyError:
+                self._fail_inflight(m.obj, h, phase_index, "late_fail",
+                                    consume)
+                continue
+            self.health.record_success(getattr(h, "channel", -1))
             self._finish_record(m.obj, consume, late)
         return extra
 
@@ -822,10 +1198,10 @@ class SlackAwareMover:
             self._finish_record(m.obj, now, 0.0, superseded=True)
         elif obj.tier == m.dst:
             return None
-        try:
-            h = self.backend.start_move(obj, m.dst, after=after)
-        except TypeError:       # backend without dependency chaining
-            h = self.backend.start_move(obj, m.dst)
+        h = self._start_with_retry(entry, obj, after, now)
+        if h is None and obj.tier != m.dst:
+            return None     # retries exhausted (fault recorded); a payload-
+                            # free logical flip returns None *after* flipping
         self.stats.n_moves += 1
         self.stats.moved_bytes += m.size_bytes
         self._inflight[m.obj] = h
@@ -846,6 +1222,10 @@ class SlackAwareMover:
         settle = getattr(self.backend, "settle", None)
         if settle is not None:
             settle(now)
+        # failure upkeep (both no-ops on a fault-free run): purge copies
+        # that late-failed at settle, then cancel-and-reissue stragglers
+        self._sweep_failures(phase_index, now)
+        self._detect_stragglers(phase_index, now)
         # release first so moves this phase both triggers AND consumes flow
         # through the same fence logic (incl. chunk-granular consumption)
         self._release(plan, phase_index, n_phases, now)
@@ -853,6 +1233,9 @@ class SlackAwareMover:
 
     def drain(self) -> None:
         for name, h in list(self._inflight.items()):
-            self.backend.wait(h)
-            self._complete(h)
+            try:
+                self.backend.wait(h)
+                self._complete(h)
+            except CopyError:
+                pass            # draining: the copy's fate is recorded
             del self._inflight[name]

@@ -85,6 +85,23 @@ class StageProvenance:
     hist_epoch: int = 0
 
 
+def fault_provenance(n_degraded: int, n_rollbacks: int, profile_epoch: int,
+                     chunk_generation: int,
+                     hist_epoch: int = 0) -> StageProvenance:
+    """Extra provenance entry the session appends to a plan rebuilt after
+    fault events (degraded serves / eviction rollbacks under the previous
+    plan): it marks that the rebuild's profile inputs were shaped by
+    failures, not only by workload drift.  Appended *in addition to* the
+    canonical ``STAGE_NAMES`` stages, and only on fault-bearing rebuilds
+    — fault-free provenance is byte-identical to the legacy pipeline."""
+    return StageProvenance(
+        stage="fault", policy="fault-replay", profile_epoch=profile_epoch,
+        chunk_generation=chunk_generation,
+        detail=(f"{n_degraded} degraded serves, {n_rollbacks} eviction "
+                f"rollbacks since last plan"),
+        hist_epoch=hist_epoch)
+
+
 @dataclasses.dataclass
 class PlanProgram(PlacementPlan):
     """The pipeline's product: a :class:`~.planner.PlacementPlan` plus the

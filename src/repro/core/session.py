@@ -49,9 +49,11 @@ from . import initial as initial_mod
 from . import perfmodel
 from . import policy as policy_mod
 from .data_objects import DataObject, ObjectRegistry
+from .faults import ChaosBackend, CopyError, DegradedServe, FaultSpec
 from .instrumentation import InstrumentationSource, PhaseSample
 from .monitor import VariationMonitor
-from .mover import ProactiveMover, SlackAwareMover, TierBackend
+from .mover import (ProactiveMover, SlackAwareMover, TierBackend,
+                    _handle_orphaned)
 from .perfmodel import CalibrationConstants
 from .phase import Phase, PhaseGraph, PhaseTraceEvent
 from .planner import MoveOp, PlacementPlan, Planner, emit_schedule
@@ -144,6 +146,21 @@ class RuntimeConfig:
     # Interval-guidance policy (policy="interval", Olson et al. style):
     # per-interval exponential decay of the access-heat ranking.
     interval_decay: float = 0.6
+    # Fault injection (core/faults.py): a seeded FaultSpec wraps the
+    # resolved backend in a ChaosBackend.  None (default) injects nothing
+    # and leaves every plan/trace bitwise identical to the fault-free
+    # pipeline.
+    fault_spec: Optional[FaultSpec] = None
+    # Max transient start_move failures retried per move (the backoff is
+    # additionally bounded by the move's slack deadline).
+    copy_retry_limit: int = 3
+    # Straggler threshold: an in-flight copy exceeding this factor times
+    # its priced full-bandwidth time is cancelled and reissued on another
+    # channel; the same factor bounds fence waits (deadline abandonment,
+    # the no-deadlock guarantee against stuck handles).  None resolves to
+    # 4.0 when a fault_spec is set (channel contention alone legitimately
+    # costs up to copy_channels x) and stays off otherwise.
+    straggler_factor: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -157,6 +174,21 @@ class PhaseContext:
     stall_s: float = 0.0
     elapsed: float = 0.0
     sample: Optional[PhaseSample] = None
+
+
+@dataclasses.dataclass
+class TierAudit:
+    """Result of :meth:`Session.audit_tiers`: the invariant violations
+    found before healing, whether a corrective heal ran, and whether the
+    post-heal re-check came back clean."""
+
+    violations: List[str]
+    healed: bool = False
+    clean_after_heal: bool = True
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
 
 
 class Session:
@@ -173,7 +205,13 @@ class Session:
             backends_mod.make_backend(
                 self.config.backend, machine,
                 mover=self.config.mover, channels=self.config.copy_channels,
-                priorities=self.config.copy_channel_priorities)
+                priorities=self.config.copy_channel_priorities,
+                fault_spec=self.config.fault_spec)
+        if (self.config.fault_spec is not None
+                and not isinstance(self.backend, ChaosBackend)):
+            # any backend (including one passed in) gains the configured
+            # fault profile; the "chaos" factory already wrapped its inner
+            self.backend = ChaosBackend(self.backend, self.config.fault_spec)
         self.cf = cf or CalibrationConstants()
         self.capacity = (self.config.fast_capacity_bytes
                          if self.config.fast_capacity_bytes is not None
@@ -231,6 +269,20 @@ class Session:
         self.n_recalibrations = 0       # CF folds applied by the feedback
         self.last_measured_iteration_time: Optional[float] = None
         self.last_pred_err: Optional[float] = None
+        # Fault-tolerance bookkeeping: the session-level log of
+        # DegradedServe/EvictionRollback events (stamped with iteration),
+        # the audit counters, and the per-iteration/per-epoch flags that
+        # trigger auto-audits and fault provenance.
+        self.fault_log: List[Any] = []
+        self.n_degraded_serves = 0
+        self.n_eviction_rollbacks = 0
+        self.n_audits = 0
+        self.n_audit_violations = 0
+        self.n_heals = 0
+        self._faults_this_iter = False
+        self._degraded_phases: set = set()      # cleared each iteration
+        self._degraded_since_plan = 0
+        self._rollbacks_since_plan = 0
 
     # ------------------------------------------------------------ registration
     def register(self, name: str, spec: Any = None, *,
@@ -296,11 +348,23 @@ class Session:
         self.source = source
 
     # ------------------------------------------------------------- loop set-up
+    def _resolved_straggler_factor(self) -> Optional[float]:
+        """Explicit config wins; otherwise straggler detection arms itself
+        (factor 4.0) whenever faults are injected — the no-deadlock
+        guarantee against stuck handles — and stays off fault-free."""
+        if self.config.straggler_factor is not None:
+            return self.config.straggler_factor
+        return 4.0 if self.config.fault_spec is not None else None
+
     def _make_mover(self):
         if self.config.mover == "slack":
-            return SlackAwareMover(self.registry, self.backend)
+            return SlackAwareMover(
+                self.registry, self.backend,
+                retry_limit=self.config.copy_retry_limit,
+                straggler_factor=self._resolved_straggler_factor())
         if self.config.mover == "fifo":
-            return ProactiveMover(self.registry, self.backend)
+            return ProactiveMover(self.registry, self.backend,
+                                  retry_limit=self.config.copy_retry_limit)
         raise ValueError(f"unknown mover {self.config.mover!r}")
 
     def _start_loop(self, phase_names: Sequence[str]) -> None:
@@ -331,6 +395,10 @@ class Session:
         self._cal_snapshot = None
         self.last_measured_iteration_time = None
         self.last_pred_err = None
+        self._faults_this_iter = False
+        self._degraded_phases = set()
+        self._degraded_since_plan = 0
+        self._rollbacks_since_plan = 0
         self.profiler.clear()
         self.monitor = VariationMonitor(threshold=self.config.drift_threshold)
         self.graph = PhaseGraph(
@@ -345,7 +413,13 @@ class Session:
                 if place is not None:   # allocation-time placement: no copy
                     place(self.registry[name], "fast")
                 else:
-                    self.backend.start_move(self.registry[name], "fast")
+                    try:
+                        self.backend.start_move(self.registry[name], "fast")
+                    except CopyError:
+                        # initial placement is a best-effort hint — a
+                        # failed placement copy just means the object
+                        # starts slow and the plan fetches it later
+                        continue
 
     def _ensure_loop(self) -> None:
         if not self._loop_started:
@@ -452,6 +526,7 @@ class Session:
         self._iter_stall_s = 0.0
         self._iter_elapsed_s = 0.0
         self._iter_phase_elapsed = {}
+        self._degraded_phases = set()
         # The plan's prediction made observable: the first *settled*
         # iteration after a (re)plan — the one that begins with the
         # monitor-baseline window already closed, so the plan's one-time
@@ -480,6 +555,7 @@ class Session:
             if index >= n:
                 return 0.0
             stall = self.mover.on_phase_start(self.plan, index, n)
+            self._drain_mover_faults()
             self._iter_stall_s += stall
             return stall
         return 0.0
@@ -527,7 +603,10 @@ class Session:
             if index == len(self._phase_names) - 1:
                 self._baseline_pending = False
         else:
-            drift = self.monitor.observe(index, elapsed)
+            # a phase served degraded this iteration carries a *confirmed*
+            # fault slowdown — the monitor skips its debounce for it
+            drift = self.monitor.observe(
+                index, elapsed, faulted=index in self._degraded_phases)
             if drift is not None:
                 self._reprofile()
 
@@ -563,6 +642,109 @@ class Session:
             self._measure_pending = False
             self._on_baseline_measured(self._iter_elapsed_s
                                        + self._iter_stall_s)
+        # any failure path this iteration triggers the tier-state audit
+        # (self-healing); heal-time correctives may fault too — drain them
+        self._drain_mover_faults()
+        if self._faults_this_iter:
+            self._faults_this_iter = False
+            self.audit_tiers()
+            self._drain_mover_faults()
+            self._faults_this_iter = False
+
+    # --------------------------------------------------------- fault handling
+    def _drain_mover_faults(self) -> bool:
+        """Collect the mover's DegradedServe/EvictionRollback events into
+        the session log (stamped with the iteration) and update counters.
+        Returns True when new events were drained."""
+        events = getattr(self.mover, "fault_events", None)
+        if not events:
+            return False
+        n = self._plan_n_phases or len(self._phase_names) or 1
+        for ev in events:
+            ev.iteration = self._iteration
+            self.fault_log.append(ev)
+            if isinstance(ev, DegradedServe):
+                self.n_degraded_serves += 1
+                self._degraded_since_plan += 1
+                self._degraded_phases.add(ev.phase_index % n)
+            else:
+                self.n_eviction_rollbacks += 1
+                self._rollbacks_since_plan += 1
+        events.clear()
+        self._faults_this_iter = True
+        return True
+
+    def _audit_violations(self) -> List[str]:
+        """Cross-check runtime residency, the mover's in-flight book, and
+        the capacity book.  Violation-free on every fault-free run *and*
+        after every handled failure (rollbacks keep residency consistent
+        by never flipping tiers)."""
+        violations: List[str] = []
+        for obj in self.registry:
+            if obj.tier not in ("fast", "slow"):
+                violations.append(
+                    f"{obj.name}: invalid tier {obj.tier!r}")
+        inflight = (getattr(self.mover, "_inflight", None) or {}
+                    if self.mover is not None else {})
+        evict_inflight = set()
+        for name, h in inflight.items():
+            if _handle_orphaned(self.registry, name, h):
+                violations.append(
+                    f"{name}: in-flight handle for a retired object")
+            elif (getattr(h, "dst", None) == "slow"
+                    and not getattr(h, "landed", False)):
+                evict_inflight.add(name)
+        # Capacity book.  Evictions are issued lazily (at their trigger
+        # phase), so settled fast residency legitimately overshoots the
+        # budget *between* an object's fetch and its scheduled departure —
+        # only bytes with no booked departure count against capacity.  A
+        # departure is booked by an in-flight eviction (landing flips the
+        # tier) or a plan-scheduled one (the cyclic schedule re-evicts
+        # every iteration, which is also what re-absorbs a rolled-back
+        # eviction).  The heal's corrective evictions land in the
+        # in-flight set, which is what makes healing convergent.
+        planned_evict: set = set()
+        planned_fast: set = set()
+        if self.plan is not None:
+            planned_evict = {m.obj for m in self.plan.moves
+                             if m.dst == "slow"}
+            for residents in self.plan.residents:
+                planned_fast |= set(residents)
+            for obj in self.registry:
+                if (obj.tier == "fast" and not obj.pinned
+                        and obj.name not in planned_fast
+                        and obj.name not in planned_evict
+                        and obj.name not in evict_inflight):
+                    violations.append(
+                        f"{obj.name}: fast residency diverged from the "
+                        f"plan (placed slow everywhere, no eviction booked)")
+        booked = evict_inflight | planned_evict
+        fast_bytes = sum(o.size_bytes for o in self.registry
+                         if o.tier == "fast" and o.name not in booked)
+        if fast_bytes > self.capacity:
+            violations.append(
+                f"capacity: {fast_bytes} standing fast bytes (no booked "
+                f"departure) exceed the fast tier's {self.capacity}")
+        return violations
+
+    def audit_tiers(self, heal: bool = True) -> TierAudit:
+        """Tier-state reconciliation audit (run automatically after any
+        failure path; assertable in tests).  Divergence self-heals with a
+        one-shot corrective reconciliation via :meth:`_restore_plan` —
+        the same mechanics the calibration revert uses."""
+        self.n_audits += 1
+        violations = self._audit_violations()
+        if not violations:
+            return TierAudit(violations=[])
+        self.n_audit_violations += len(violations)
+        if not heal or self.plan is None:
+            return TierAudit(violations=violations, healed=False,
+                             clean_after_heal=False)
+        self.n_heals += 1
+        self._restore_plan(self.plan)
+        post = self._audit_violations()
+        return TierAudit(violations=violations, healed=True,
+                         clean_after_heal=not post)
 
     # ------------------------------------------------------------- internals
     def _pipeline_state(self) -> "policy_mod.PipelineState":
@@ -592,6 +774,16 @@ class Session:
         self._cf_dirty = False
         if self.plan is None:
             return
+        if ((self._degraded_since_plan or self._rollbacks_since_plan)
+                and isinstance(self.plan, policy_mod.PlanProgram)):
+            # fault-bearing rebuild: stamp the provenance (an *extra*
+            # entry — the canonical stage list is untouched)
+            self.plan.provenance.append(policy_mod.fault_provenance(
+                self._degraded_since_plan, self._rollbacks_since_plan,
+                self.profiler.epoch, self.registry.generation,
+                hist_epoch=getattr(self.profiler, "hist_epoch", 0)))
+        self._degraded_since_plan = 0
+        self._rollbacks_since_plan = 0
         if not recalibration:
             # a profiling-driven build opens a new plan epoch: re-arm the
             # calibration-correction budget and the best-measured memory
@@ -607,6 +799,7 @@ class Session:
             if hasattr(self.mover, "load_plan"):
                 self.mover.load_plan(self.plan, self.graph)
             self.mover.on_phase_start(self.plan, 0, self._plan_n_phases)
+            self._drain_mover_faults()
 
     def _on_baseline_measured(self, measured: float) -> None:
         """Calibration feedback — the live extension of
@@ -762,6 +955,7 @@ class Session:
             if hasattr(self.mover, "load_plan"):
                 self.mover.load_plan(enact, self.graph)
             self.mover.on_phase_start(enact, 0, self._plan_n_phases)
+            self._drain_mover_faults()
 
     def _reprofile(self) -> None:
         """Drift response.  Incremental (default): keep serving the current
@@ -872,4 +1066,14 @@ class Session:
             cf_lat=self.cf.cf_lat,
             cf_move=self.cf.cf_move,
             n_recalibrations=self.n_recalibrations,
+            # fault tolerance (all zero / empty on a fault-free run)
+            n_retries=mv.n_retries if mv else 0,
+            n_degraded_serves=self.n_degraded_serves,
+            n_eviction_rollbacks=self.n_eviction_rollbacks,
+            n_straggler_reissues=mv.n_straggler_reissues if mv else 0,
+            n_audits=self.n_audits,
+            n_audit_violations=self.n_audit_violations,
+            n_heals=self.n_heals,
+            channel_health=(self.mover.health.summary()
+                            if hasattr(self.mover, "health") else {}),
         )

@@ -8,7 +8,9 @@ from .workloads import (cg_like, ft_like, bt_like, lu_like, sp_like, mg_like,
                         kv_serving, kv_serving_skewed, moe_expert_churn,
                         graph_chase, graph_chase_skewed, paged_attention,
                         power_law_density,
-                        SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS)
+                        SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS,
+                        chaos_gated_spec, chaos_heavy_spec,
+                        CHAOS_FAULT_PROFILES)
 
 __all__ = [
     "PhaseExec", "SimObjectAccess", "SimPhaseSpec", "SimSource",
@@ -19,4 +21,5 @@ __all__ = [
     "kv_serving", "kv_serving_skewed", "moe_expert_churn", "graph_chase",
     "graph_chase_skewed", "paged_attention", "power_law_density",
     "SCENARIO_WORKLOADS", "SKEWED_SCENARIO_WORKLOADS",
+    "chaos_gated_spec", "chaos_heavy_spec", "CHAOS_FAULT_PROFILES",
 ]

@@ -231,6 +231,12 @@ class SimulationEngine:
                 channels=runtime.config.copy_channels,
                 priorities=getattr(runtime.config,
                                    "copy_channel_priorities", None))
+            fault_spec = getattr(runtime.config, "fault_spec", None)
+            if fault_spec is not None:
+                # chaos rides the clock-wired sim engine: the configured
+                # fault profile is re-applied to the swapped-in backend
+                from ..core.faults import ChaosBackend
+                backend = ChaosBackend(backend, fault_spec)
             self.runtime.backend = backend
             if self.runtime.mover is not None:
                 self.runtime.mover.backend = backend

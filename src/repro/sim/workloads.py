@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from ..core.faults import FaultSpec
 from .engine import SimObjectAccess, SimPhaseSpec, SimWorkload
 
 MB = 1024 ** 2
@@ -611,6 +612,37 @@ SKEWED_SCENARIO_WORKLOADS = {
     "graph_chase_skew": graph_chase_skewed,
     "kv_serving_skew": kv_serving_skewed,
     "paged_serving": paged_attention,
+}
+
+
+# ---------------------------------------------------------------------------
+# chaos fault profiles — fixed-seed FaultSpecs for the scenario matrix.
+# The chaos scenario family is the full matrix above re-run under one of
+# these profiles (benchmarks/run.py ``bench_chaos``); fixed seeds against
+# the deterministic virtual-time issue sequence make every chaos row as
+# reproducible as the fault-free golden traces.
+# ---------------------------------------------------------------------------
+def chaos_gated_spec(seed: int = 0) -> FaultSpec:
+    """The nightly-gated profile: 5% transient ``start_move`` failures
+    plus one permanently collapsed channel (channel 1 at 8x slowdown).
+    The regression gate requires every ``scenario_*_chaos`` row under this
+    profile to hold >= 0.85x its fault-free slack with zero audit
+    violations."""
+    return FaultSpec(seed=seed, transient_rate=0.05,
+                     straggler_channel=1, straggler_channel_factor=8.0)
+
+
+def chaos_heavy_spec(seed: int = 0) -> FaultSpec:
+    """Kitchen-sink profile for robustness tests: every fault class on at
+    once (transients, stuck handles, late failures, straggler windows) —
+    the survival test, not the performance gate."""
+    return FaultSpec(seed=seed, transient_rate=0.08, stuck_rate=0.02,
+                     late_fail_rate=0.04, straggler_rate=0.05)
+
+
+CHAOS_FAULT_PROFILES = {
+    "gated": chaos_gated_spec,
+    "heavy": chaos_heavy_spec,
 }
 
 

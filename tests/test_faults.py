@@ -1,0 +1,405 @@
+"""Fault tolerance: chaos-injected copy backends, retry/deadline
+machinery, channel health, degraded-mode serving and the tier audit.
+
+Unit tests pin each fault-path mechanism in isolation (retry backoff,
+health transitions, bounded waits, pool teardown); end-to-end tests run
+the scenario workloads under seeded fault profiles and assert the
+acceptance invariants: chaos off is bitwise identical to the fault-free
+pipeline, chaos on keeps >= 85% of fault-free steady slack with zero
+audit violations, and no fault profile can deadlock a run.
+"""
+
+import concurrent.futures
+import math
+
+import pytest
+
+from repro.core import (PAPER_DRAM_NVM, ChannelHealth, ChaosBackend,
+                        CopyTimeoutError, FaultSpec, RuntimeConfig,
+                        TransientCopyError, UnimemRuntime, calibrate,
+                        make_backend)
+from repro.core.data_objects import DataObject, ObjectRegistry
+from repro.core.faults import DegradedServe, EvictionRollback
+from repro.core.monitor import VariationMonitor
+from repro.core.mover import (CpuPoolBackend, JaxTierBackend,
+                              SlackAwareMover, _PoolCopy)
+from repro.core.planner import MoveOp, ScheduledMove
+from repro.core.policy import STAGE_NAMES, fault_provenance
+from repro.sim import SimulationEngine
+from repro.sim.workloads import (SCENARIO_WORKLOADS, chaos_gated_spec,
+                                 chaos_heavy_spec)
+from repro.sim.engine import SimObjectAccess, SimPhaseSpec
+from repro.sim.workloads import SimWorkload
+
+MB = 1024 ** 2
+MACHINE = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+CF = calibrate(MACHINE)
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+def run_workload(wl: SimWorkload, fault_spec=None, iters: int = 8,
+                 capacity: int = 256 * MB, **config_kw):
+    rt = UnimemRuntime(
+        MACHINE,
+        RuntimeConfig(fast_capacity_bytes=capacity, mover="slack",
+                      copy_channels=2, drift_threshold=10.0,
+                      fault_spec=fault_spec, **config_kw),
+        cf=CF)
+    for n, s in wl.objects.items():
+        rt.alloc(n, size_bytes=s, chunkable=wl.chunkable.get(n, False))
+    rt.start_loop([p.name for p in wl.phases],
+                  static_refs=wl.static_ref_counts())
+    res = SimulationEngine(MACHINE, wl, runtime=rt).run(iters)
+    return res, rt
+
+
+def _mover_fixture(spec: FaultSpec, size_mb: int = 64):
+    now = [0.0]
+    reg = ObjectRegistry()
+    reg.alloc("a", size_mb * MB)
+    inner = make_backend("sim", MACHINE, now_fn=lambda: now[0],
+                         mover="slack", channels=2)
+    backend = ChaosBackend(inner, spec)
+    mover = SlackAwareMover(reg, backend, retry_limit=3,
+                            straggler_factor=4.0)
+    return reg, backend, mover, now
+
+
+def _entry(name: str, dst: str, size_bytes: int) -> ScheduledMove:
+    return ScheduledMove(MoveOp(name, dst, 0, 0, size_bytes),
+                         window_s=1.0, duration_s=0.5, slack_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# retry machinery
+# ---------------------------------------------------------------------------
+def test_transient_retry_succeeds():
+    # seed 1: first rng draw 0.134 (< 0.5 -> injected failure), second
+    # 0.847 (pass) — exactly one retry, then the copy issues
+    reg, backend, mover, _ = _mover_fixture(
+        FaultSpec(seed=1, transient_rate=0.5))
+    e = _entry("a", "fast", reg["a"].size_bytes)
+    h = mover._start_with_retry(e, reg["a"], None, 0.0)
+    assert h is not None
+    assert mover.stats.n_retries == 1
+    assert mover.fault_events == []
+    assert ("transient", "a", -1) in backend.fault_log
+
+
+def test_transient_retries_exhaust_to_degraded_serve():
+    reg, backend, mover, _ = _mover_fixture(
+        FaultSpec(seed=0, transient_rate=1.0))
+    e = _entry("a", "fast", reg["a"].size_bytes)
+    h = mover._start_with_retry(e, reg["a"], None, 0.0)
+    assert h is None
+    [ev] = mover.fault_events
+    assert isinstance(ev, DegradedServe)
+    assert ev.obj == "a" and ev.reason == "retries_exhausted"
+    assert mover.stats.n_degraded == 1
+    # at most retry_limit re-attempts were ever made
+    assert len(backend.fault_log) <= 1 + mover.retry_limit
+
+
+def test_failed_eviction_rolls_back_residency():
+    reg, backend, mover, _ = _mover_fixture(
+        FaultSpec(seed=0, transient_rate=1.0))
+    reg["a"].tier = "fast"
+    e = _entry("a", "slow", reg["a"].size_bytes)
+    h = mover._start_with_retry(e, reg["a"], None, 0.0)
+    assert h is None
+    assert reg["a"].tier == "fast"          # residency rolled back intact
+    [ev] = mover.fault_events
+    assert isinstance(ev, EvictionRollback)
+    assert mover.stats.n_failed_evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# channel health state machine
+# ---------------------------------------------------------------------------
+def test_channel_health_transitions_and_probation():
+    health = ChannelHealth(quarantine_after=2, probation_interval=3)
+    assert health.avoid() == set()
+    health.record_fault(0)
+    assert health.state(0) == "degraded" and health.avoid() == set()
+    health.record_fault(0)
+    assert health.state(0) == "quarantined"
+    assert health.avoid() == {0}            # choose 1
+    assert health.avoid() == {0}            # choose 2
+    assert health.avoid() == set()          # choose 3: probation probe
+    health.record_success(0)                # probe landed clean
+    assert health.state(0) == "degraded"
+    health.record_success(0)
+    assert health.state(0) == "healthy"
+    assert health.summary() == {}
+
+
+def test_channel_health_ignores_unknown_channels():
+    health = ChannelHealth()
+    health.record_fault(-1)
+    health.record_fault(None)
+    health.record_success(-1)
+    assert health.summary() == {} and health.avoid() == set()
+
+
+# ---------------------------------------------------------------------------
+# bounded-wait contract (all four backends)
+# ---------------------------------------------------------------------------
+def _sim_handle(kind: str):
+    now = [0.0]
+    reg = ObjectRegistry()
+    reg.alloc("big", 256 * MB)
+    backend = make_backend("sim", MACHINE, now_fn=lambda: now[0],
+                           mover=("slack" if kind == "channel" else "fifo"),
+                           channels=2)
+    return backend, backend.start_move(reg["big"], "fast")
+
+
+@pytest.mark.parametrize("kind", ["serial", "channel"])
+def test_bounded_wait_sim_backends(kind):
+    backend, h = _sim_handle(kind)
+    stall = h.done                          # virtual stall from t=0
+    assert stall > 0
+    with pytest.raises(CopyTimeoutError):
+        backend.wait(h, timeout=stall / 10)
+    assert backend.wait(h, timeout=stall * 10) == pytest.approx(stall)
+    assert backend.wait(h) == pytest.approx(stall)   # unbounded still fine
+
+
+def test_bounded_wait_cpu_pool():
+    backend = CpuPoolBackend(MACHINE)
+    try:
+        reg = ObjectRegistry()
+        reg.alloc("x", MB, payload=None)
+        stuck = _PoolCopy(reg["x"], "fast", concurrent.futures.Future())
+        with pytest.raises(CopyTimeoutError):
+            backend.wait(stuck, timeout=0.05)
+        assert not backend.is_done(stuck)
+    finally:
+        backend.shutdown()
+
+
+def test_bounded_wait_jax_leaves():
+    class _NeverReady:
+        def is_ready(self):
+            return False
+
+    class _Ready:
+        def is_ready(self):
+            return True
+
+        def block_until_ready(self):
+            return self
+
+    with pytest.raises(CopyTimeoutError):
+        JaxTierBackend._wait_leaves([_NeverReady()], 0.05, "test fence")
+    JaxTierBackend._wait_leaves([_Ready()], 0.05, "test fence")
+    JaxTierBackend._wait_leaves([_Ready()], None, "test fence")
+
+
+# ---------------------------------------------------------------------------
+# CpuPoolBackend teardown
+# ---------------------------------------------------------------------------
+def test_cpu_pool_shutdown_idempotent():
+    backend = CpuPoolBackend(MACHINE)
+    backend.shutdown()
+    backend.shutdown()                      # double shutdown: no-op
+    backend.__del__()                       # del-after-shutdown: no-op
+    reg = ObjectRegistry()
+    reg.alloc("x", MB, payload={"w": [1.0]})
+    with pytest.raises(RuntimeError):
+        backend.start_move(reg["x"], "fast")
+
+
+def test_cpu_pool_del_without_shutdown():
+    backend = CpuPoolBackend(MACHINE)
+    backend.__del__()                       # releases the pool
+    backend.__del__()                       # and stays reentrant
+
+
+# ---------------------------------------------------------------------------
+# chaos backend + registry
+# ---------------------------------------------------------------------------
+def test_chaos_registry_factory():
+    backend = make_backend("chaos", MACHINE, chaos_inner="sim",
+                           now_fn=lambda: 0.0, mover="slack", channels=2,
+                           fault_spec=FaultSpec(seed=7, transient_rate=1.0))
+    assert isinstance(backend, ChaosBackend)
+    reg = ObjectRegistry()
+    reg.alloc("a", MB)
+    with pytest.raises(TransientCopyError):
+        backend.start_move(reg["a"], "fast")
+    with pytest.raises(ValueError):
+        make_backend("chaos", MACHINE, chaos_inner="chaos")
+
+
+def test_chaos_straggler_channel_stretches_service_time():
+    spec = FaultSpec(straggler_channel=1, straggler_channel_factor=8.0)
+    now = [0.0]
+    reg = ObjectRegistry()
+    reg.alloc("a", 64 * MB)
+    reg.alloc("b", 64 * MB)
+    backend = ChaosBackend(make_backend(
+        "sim", MACHINE, now_fn=lambda: now[0], mover="slack", channels=2),
+        spec)
+    ha = backend.start_move(reg["a"], "fast")    # lands on channel 0
+    hb = backend.start_move(reg["b"], "fast")    # lands on channel 1: 8x
+    slow, fast = (ha, hb) if ha.channel == 1 else (hb, ha)
+    assert (slow.done - slow.start) > 3 * (fast.done - fast.start)
+
+
+def test_chaos_stuck_handle_wedges_until_cancelled():
+    spec = FaultSpec(seed=0, stuck_rate=1.0)
+    now = [0.0]
+    reg = ObjectRegistry()
+    reg.alloc("a", 64 * MB)
+    inner = make_backend("sim", MACHINE, now_fn=lambda: now[0],
+                         mover="slack", channels=2)
+    backend = ChaosBackend(inner, spec)
+    h = backend.start_move(reg["a"], "fast")
+    assert not math.isfinite(h.done)
+    assert not backend.is_done(h)
+    with pytest.raises(CopyTimeoutError):
+        backend.wait(h, timeout=1.0)
+    assert inner.cancel(h)                  # cancel frees the channel
+    assert math.isfinite(inner._free_at[h.channel])
+    assert reg["a"].tier == "slow"          # the tier never flipped
+
+
+# ---------------------------------------------------------------------------
+# monitor: confirmed faults bypass the debounce
+# ---------------------------------------------------------------------------
+def test_monitor_faulted_observation_bypasses_debounce():
+    clean, faulted = VariationMonitor(patience=3), VariationMonitor(patience=3)
+    for m in (clean, faulted):
+        m.set_baseline(0, 1.0)
+    assert clean.observe(0, 2.0) is None            # strike 1 of 3
+    assert faulted.observe(0, 2.0, faulted=True) is not None
+
+
+# ---------------------------------------------------------------------------
+# fault provenance
+# ---------------------------------------------------------------------------
+def test_fault_provenance_stage():
+    sp = fault_provenance(2, 1, profile_epoch=3, chunk_generation=4)
+    assert sp.stage == "fault" and sp.stage not in STAGE_NAMES
+    assert "2 degraded serves" in sp.detail
+    assert "1 eviction rollbacks" in sp.detail
+
+
+# ---------------------------------------------------------------------------
+# end to end: chaos off is bitwise identical, chaos on degrades gracefully
+# ---------------------------------------------------------------------------
+def test_zero_rate_chaos_is_bitwise_identical():
+    wl_a = SCENARIO_WORKLOADS["kv_serving"]()
+    wl_b = SCENARIO_WORKLOADS["kv_serving"]()
+    base, _ = run_workload(wl_a)
+    wrapped, rt = run_workload(wl_b, fault_spec=FaultSpec())
+    assert isinstance(rt.backend, ChaosBackend)
+    assert wrapped.iteration_times == base.iteration_times
+    assert rt.backend.fault_log == []
+
+
+def test_chaos_run_is_deterministic():
+    spec = chaos_gated_spec(seed=42)
+    runs = [run_workload(SCENARIO_WORKLOADS["kv_serving"](),
+                         fault_spec=spec) for _ in range(2)]
+    (res_a, rt_a), (res_b, rt_b) = runs
+    assert res_a.iteration_times == res_b.iteration_times
+    for key in ("n_retries", "n_degraded_serves", "n_eviction_rollbacks",
+                "n_straggler_reissues", "n_audit_violations"):
+        assert rt_a.stats()[key] == rt_b.stats()[key]
+    assert rt_a.backend.fault_log == rt_b.backend.fault_log
+
+
+def test_gated_chaos_keeps_slo_and_quarantines_straggler():
+    wl = SCENARIO_WORKLOADS["kv_serving"]()
+    base, _ = run_workload(SCENARIO_WORKLOADS["kv_serving"]())
+    chaos, rt = run_workload(wl, fault_spec=chaos_gated_spec(seed=42))
+    s = rt.stats()
+    assert (base.steady_iteration_time / chaos.steady_iteration_time) >= 0.85
+    assert s["n_audit_violations"] == 0
+    assert rt.audit_tiers(heal=False).ok    # final state reconciles too
+    assert s["n_retries"] > 0               # faults were actually injected
+    # the 8x straggler channel was flagged; the healthy channel stayed so
+    assert s["channel_health"].get(1) in ("degraded", "quarantined")
+    assert 0 not in s["channel_health"]
+
+
+def test_heavy_chaos_never_deadlocks_and_stays_consistent():
+    wl = SCENARIO_WORKLOADS["moe_churn"]()
+    res, rt = run_workload(wl, fault_spec=chaos_heavy_spec(seed=5))
+    assert math.isfinite(res.total_time)
+    kinds = {k for k, _, _ in rt.backend.fault_log}
+    assert "stuck" in kinds                 # the profile did inject wedges
+    s = rt.stats()
+    assert s["n_degraded_serves"] > 0
+    assert s["n_audit_violations"] == 0
+    assert rt.audit_tiers(heal=False).ok
+    for ev in rt.fault_log:                 # provenance is fully stamped
+        assert ev.iteration >= 0 and ev.reason
+
+
+# ---------------------------------------------------------------------------
+# tier audit: detection + self-healing
+# ---------------------------------------------------------------------------
+def _divergence_workload() -> SimWorkload:
+    phases = [
+        SimPhaseSpec("p0", 0.01, {"hot": SimObjectAccess(2e6, 0.5)}),
+        SimPhaseSpec("p1", 0.01, {"warm": SimObjectAccess(4e6, 1.0)}),
+    ]
+    return SimWorkload("diverge", phases,
+                       {"hot": 64 * MB, "warm": 96 * MB, "cold": 64 * MB})
+
+
+def test_audit_clean_on_fault_free_run():
+    _, rt = run_workload(_divergence_workload(), capacity=128 * MB)
+    audit = rt.audit_tiers()
+    assert audit.ok and not audit.healed
+    assert rt.stats()["n_audits"] >= 1
+
+
+def test_audit_detects_divergence_and_heals():
+    _, rt = run_workload(_divergence_workload(), capacity=128 * MB)
+    # simulate a residency leak the plan knows nothing about: an
+    # unreferenced object materializes in the fast tier
+    rt.registry["cold"].tier = "fast"
+    audit = rt.audit_tiers()
+    assert not audit.ok
+    assert any("cold" in v for v in audit.violations)
+    assert audit.healed and audit.clean_after_heal
+    # the heal booked a corrective eviction; once drained the registry
+    # reconciles to the plan
+    rt.mover.drain()
+    assert rt.registry["cold"].tier == "slow"
+    assert rt.audit_tiers(heal=False).ok
+
+
+def test_audit_without_heal_reports_only():
+    _, rt = run_workload(_divergence_workload(), capacity=128 * MB)
+    rt.registry["cold"].tier = "fast"
+    audit = rt.audit_tiers(heal=False)
+    assert not audit.ok and not audit.healed
+    assert rt.registry["cold"].tier == "fast"   # untouched
+
+
+# ---------------------------------------------------------------------------
+# exception safety: a crashed iteration leaves the runtime serviceable
+# ---------------------------------------------------------------------------
+def test_exception_mid_iteration_with_outstanding_copies():
+    wl = SCENARIO_WORKLOADS["kv_serving"]()
+    _, rt = run_workload(wl, iters=3)
+    with pytest.raises(RuntimeError, match="boom"):
+        with rt.iteration():
+            with rt.phase(wl.phases[0].name):
+                pass                        # triggers/fences async moves
+            raise RuntimeError("boom")      # outstanding copies in flight
+    audit = rt.audit_tiers()
+    assert audit.ok or (audit.healed and audit.clean_after_heal)
+    # the next iteration is fully serviceable
+    with rt.iteration():
+        for ph in wl.phases:
+            with rt.phase(ph.name):
+                pass
+    assert rt.audit_tiers().ok
