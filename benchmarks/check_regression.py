@@ -22,6 +22,13 @@ beyond its tolerance.
   slack over the fault-free run) at or above the 0.85 floor, and the
   tier audit must stay violation-free: ``audit_violations`` is
   ceiling-gated strictly below 1 — i.e. exactly zero.
+* ``tenants.csv`` — the multi-tenant QoS row (``bench_tenants``): the
+  ``bandwidth_partition`` policy against the aggregate unimem solve on
+  ``tenant_serving``, per-tenant p99 slack vs DRAM-only.  ``tail_gain``
+  (the worst admitted non-whale tenant's slack ratio partition/unimem)
+  is floor-gated at 1.15 — partitioning must keep buying the long tail
+  real p99 headroom — and ``whale_ratio`` (the whale's same ratio) at
+  0.95 — without starving the whale (observed 1.27 / 0.97).
 
 Usage::
 
@@ -69,6 +76,11 @@ FLOORS = {
     # chaos acceptance: under the gated fault profile every scenario must
     # hold at least 85% of its fault-free steady slack (observed
     # 0.905-1.000 at the committed seed)
+    # multi-tenant QoS acceptance: bandwidth partitioning must lift the
+    # worst admitted tail tenant's p99 slack >= 1.15x over the aggregate
+    # solve while holding >= 95% of the whale's (observed 1.27 / 0.97)
+    ("scenario_tenant_serving", "tail_gain"): 1.15,
+    ("scenario_tenant_serving", "whale_ratio"): 0.95,
     ("scenario_kv_serving_chaos", "vs_faultfree"): 0.85,
     ("scenario_moe_churn_chaos", "vs_faultfree"): 0.85,
     ("scenario_graph_chase_chaos", "vs_faultfree"): 0.85,

@@ -49,6 +49,32 @@ def run_unimem(machine: MachineProfile, wl: SimWorkload,
     return res, rt
 
 
+def run_unimem_tenants(machine: MachineProfile, wl: SimWorkload,
+                       qos: Dict[str, tuple],
+                       dram_bytes: int = DEFAULT_DRAM, iters: int = ITERS,
+                       cf: Optional[CalibrationConstants] = None,
+                       **config_kw):
+    """Like :func:`run_unimem`, but declares each QoS entry as a tenant and
+    registers the workload's ``tenant/``-prefixed objects through the tenant
+    handles (``qos`` maps tenant -> (priority, slo))."""
+    cf = cf or calibrate(machine)
+    rt = UnimemRuntime(
+        machine, RuntimeConfig(fast_capacity_bytes=dram_bytes, mover="slack",
+                               **config_kw), cf=cf)
+    handles = {t: rt.tenant(t, priority=p, slo=s)
+               for t, (p, s) in qos.items()}
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        tenant, sep, rest = n.partition("/")
+        owner = handles.get(tenant) if sep else None
+        target, reg_name = (owner, rest) if owner is not None else (rt, n)
+        target.register(reg_name, s, chunkable=wl.chunkable.get(n, False),
+                        static_refs=statics.get(n))
+    eng = SimulationEngine(machine, wl, runtime=rt)
+    res = eng.run(iters)
+    return res, rt
+
+
 def run_xmen(machine: MachineProfile, wl: SimWorkload,
              dram_bytes: int = DEFAULT_DRAM, iters: int = ITERS):
     """X-Men baseline (Dulloor et al., EuroSys'16): offline profiling,

@@ -460,6 +460,60 @@ def bench_chaos() -> None:
     write_rows("chaos.csv", "scenario_", must_contain="_chaos")
 
 
+# --------------------------- multi-tenant serving: QoS partition vs aggregate
+def bench_tenants() -> None:
+    """The tenancy layer's gated row: ``tenant_serving`` (one whale, three
+    mid tenants, one cold archive) under the aggregate unimem solve vs the
+    ``bandwidth_partition`` policy, against a DRAM-only reference.
+
+    Per tenant, ``slack = dram_p99 / arm_p99`` (p99 of the per-iteration
+    time summed over the tenant's phases, steady tail).  The gated
+    quantities: ``tail_gain`` — the worst admitted non-whale tenant's
+    slack ratio partition/unimem (nightly floor 1.15: partitioning must
+    buy the long tail real p99 headroom) — and ``whale_ratio`` — the
+    whale's same ratio (floor 0.95: without starving the whale).  The
+    cold tenant is admission-demoted to serve-from-slow and excluded from
+    the tail by the demotion record itself."""
+    from repro.core.tenancy import per_tenant_p99
+    from repro.sim.workloads import TENANT_SERVING_QOS, tenant_serving
+
+    from .common import run_unimem_tenants
+
+    mach = PAPER_DRAM_NVM.scaled(bw_scale=0.5, lat_scale=2.0)
+    wl = tenant_serving()
+    qos = TENANT_SERVING_QOS
+    names = [ph.name for ph in wl.phases]
+    iters = 20
+    kw = dict(dram_bytes=192 * MB, iters=iters, copy_channels=7,
+              drift_threshold=10.0)
+    t0 = time.perf_counter()
+    dram = run_static(mach, wl, "fast", iters=iters)
+    uni, _ = run_unimem_tenants(mach, wl, qos, **kw)
+    part, prt = run_unimem_tenants(mach, wl, qos,
+                                   policy="bandwidth_partition", **kw)
+    us = (time.perf_counter() - t0) * 1e6
+    p_dram = per_tenant_p99(dram.phase_trace, names, qos)
+    p_uni = per_tenant_p99(uni.phase_trace, names, qos)
+    p_bp = per_tenant_p99(part.phase_trace, names, qos)
+    slack_uni = {t: p_dram[t] / p_uni[t] for t in p_dram}
+    slack_bp = {t: p_dram[t] / p_bp[t] for t in p_dram}
+    admission = dict(getattr(prt.plan, "tenant_admission", None) or {})
+    tail = [t for t in sorted(qos) if t != "whale" and t not in admission]
+    tail_gain = min(slack_bp[t] / slack_uni[t] for t in tail)
+    whale_ratio = slack_bp["whale"] / slack_uni["whale"]
+    shares = dict(getattr(prt.plan, "tenant_shares", None) or {})
+    channels = dict(getattr(prt.plan, "tenant_channels", None) or {})
+    derived = [f"tail_gain={tail_gain:.3f}", f"whale_ratio={whale_ratio:.3f}"]
+    for t in sorted(qos):
+        derived.append(f"{t}_slack_uni={slack_uni[t]:.3f}")
+        derived.append(f"{t}_slack_bp={slack_bp[t]:.3f}")
+    derived.append(f"demoted={'+'.join(sorted(admission)) or 'none'}")
+    derived.append(f"whale_share_mb={shares.get('whale', 0) / MB:.0f}")
+    derived.append(f"whale_channels={len(channels.get('whale', []))}")
+    emit("scenario_tenant_serving", us, ";".join(derived))
+    write_rows("tenants.csv", "scenario_tenant")
+
+
 # ------------------------------ planner latency: vectorized vs pre-PR path
 def bench_planner() -> None:
     """Plan-construction latency vs registry size.
@@ -627,6 +681,7 @@ BENCHES = {
     "lm_tiering": bench_lm_tiering,
     "scenarios": bench_scenarios,
     "chaos": bench_chaos,
+    "tenants": bench_tenants,
     "planner": bench_planner,
     "kernels": bench_kernels,
 }

@@ -5,7 +5,7 @@ from .backends import available_backends, make_backend, register_backend
 from .data_objects import DataObject, ObjectRegistry
 from .faults import (ChannelHealth, ChaosBackend, CopyError, CopyFailedError,
                      CopyTimeoutError, DegradedServe, EvictionRollback,
-                     FaultSpec, TransientCopyError)
+                     FaultLog, FaultSpec, TransientCopyError)
 from .histogram import Histogram, uniform_mass
 from .instrumentation import (InstrumentationSource, ManualSource,
                               PhaseSample, XlaCostAnalysisSource)
@@ -20,12 +20,14 @@ from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
                     build_phase_graph)
 from .planner import (MoveOp, PhaseDecision, PlacementPlan, Planner,
                       ScheduledMove, emit_schedule)
-from .policy import (PipelineState, PlacementPolicy, PlanProgram,
-                     StageProvenance, UnimemPolicy, available_policies,
-                     make_policy, register_policy)
+from .policy import (BandwidthPartitionPolicy, PipelineState, PlacementPolicy,
+                     PlanProgram, StageProvenance, UnimemPolicy,
+                     available_policies, make_policy, register_policy)
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
 from .session import PhaseContext, Session, TierAudit
+from .tenancy import (TENANT_SEP, TenantHandle, TenantSpec, capacity_shares,
+                      channel_shares, per_tenant_p99, tenant_of)
 from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
                     STT_RAM, PCRAM, RERAM, TPU_V5E, TPU_V5E_VMEM,
                     V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
@@ -40,8 +42,11 @@ __all__ = [
     "InstrumentationSource", "ManualSource", "PhaseSample",
     "XlaCostAnalysisSource", "Session", "PhaseContext", "TierAudit",
     "ChannelHealth", "ChaosBackend", "CopyError", "CopyFailedError",
-    "CopyTimeoutError", "DegradedServe", "EvictionRollback", "FaultSpec",
-    "TransientCopyError",
+    "CopyTimeoutError", "DegradedServe", "EvictionRollback", "FaultLog",
+    "FaultSpec", "TransientCopyError",
+    "TENANT_SEP", "TenantHandle", "TenantSpec", "capacity_shares",
+    "channel_shares", "per_tenant_p99", "tenant_of",
+    "BandwidthPartitionPolicy",
     "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
     "consumed_bandwidth", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",

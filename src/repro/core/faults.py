@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 
@@ -77,9 +78,11 @@ class DegradedServe:
     obj: str
     phase_index: int            # the consuming phase that was demoted
     reason: str                 # retries_exhausted | deadline | late_fail
+                                # | admission:cold | admission:over-quota
     channel: int = -1
     slack_s: float = 0.0
     iteration: int = -1         # stamped by the session when logged
+    tenant: Optional[str] = None  # owning tenant namespace, if any
 
 
 @dataclasses.dataclass
@@ -94,6 +97,53 @@ class EvictionRollback:
     reason: str                 # retries_exhausted | late_fail
     channel: int = -1
     iteration: int = -1
+    tenant: Optional[str] = None  # owning tenant namespace, if any
+
+
+# ---------------------------------------------------------------------------
+# bounded fault log
+# ---------------------------------------------------------------------------
+class FaultLog:
+    """List-like ring buffer for session fault events.
+
+    Long-running chaos/serving loops log a fault event per incident; an
+    unbounded list grows without limit.  The ring keeps the most recent
+    ``limit`` entries and counts the overwritten rest in :attr:`dropped`
+    so provenance *counts* stay exact even after entries age out
+    (``len(log) + log.dropped`` == total events ever logged).  A falsy
+    limit (0/None) means unbounded."""
+
+    def __init__(self, limit: Optional[int] = None):
+        self.limit = int(limit) if limit else 0
+        self._entries: deque = deque(maxlen=self.limit or None)
+        self.dropped = 0
+
+    def append(self, entry: Any) -> None:
+        if self.limit and len(self._entries) >= self.limit:
+            self.dropped += 1
+        self._entries.append(entry)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    def __iter__(self):
+        return iter(self._entries)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._entries)[idx]
+        return self._entries[idx]
+
+    def __repr__(self) -> str:
+        return (f"FaultLog(len={len(self._entries)}, limit={self.limit}, "
+                f"dropped={self.dropped})")
 
 
 # ---------------------------------------------------------------------------
@@ -281,7 +331,7 @@ class ChaosBackend:
         handle.done = new_done
 
     def start_move(self, obj: Any, dst: str, after: Any = None,
-                   avoid: Any = None) -> Any:
+                   avoid: Any = None, prefer: Any = None) -> Any:
         if (self.spec.transient_rate > 0
                 and self.rng.random() < self.spec.transient_rate):
             self.fault_log.append(("transient", _obj_name(obj), -1))
@@ -293,10 +343,19 @@ class ChaosBackend:
             kwargs["after"] = after
         if avoid:
             kwargs["avoid"] = avoid
+        if prefer:
+            try:
+                h = self.inner.start_move(obj, dst, prefer=prefer, **kwargs)
+                return self._post_issue(obj, h)
+            except TypeError:   # inner without tenant channel preference
+                pass
         try:
             h = self.inner.start_move(obj, dst, **kwargs)
         except TypeError:       # inner without chaining / channel choice
             h = self.inner.start_move(obj, dst)
+        return self._post_issue(obj, h)
+
+    def _post_issue(self, obj: Any, h: Any) -> Any:
         if h is None:
             return None
         ch = getattr(h, "channel", None)

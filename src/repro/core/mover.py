@@ -46,7 +46,10 @@ protocol):
   exponential backoff bounded by the move's slack deadline.  Optional
   keywords: ``after=`` chains the copy behind a predecessor handle,
   ``avoid=`` is a set of channels the chooser must skip (quarantined
-  channels; see :class:`~.faults.ChannelHealth`).
+  channels; see :class:`~.faults.ChannelHealth`), ``prefer=`` is the set
+  of channels the copy's tenant owns under a bandwidth partition (the
+  chooser favors them but borrows idle foreign channels
+  work-conservingly; see :mod:`~.tenancy`).
 * ``wait(handle, timeout=None)`` is the **bounded-wait contract**: with a
   timeout it must raise :class:`~.faults.CopyTimeoutError` instead of
   blocking past the bound (simulated backends compare the remaining
@@ -88,6 +91,7 @@ from .faults import (ChannelHealth, CopyError, CopyTimeoutError,
                      DegradedServe, EvictionRollback, TransientCopyError)
 from .phase import PhaseGraph
 from .planner import MoveOp, PlacementPlan, ScheduledMove
+from .tenancy import tenant_of
 from .tiers import MachineProfile
 
 
@@ -483,12 +487,18 @@ class ChannelSimBackend:
 
     def start_move(self, obj: DataObject, dst: str,
                    after: Optional[_ChannelCopy] = None,
-                   avoid: Optional[set] = None) -> _ChannelCopy:
+                   avoid: Optional[set] = None,
+                   prefer: Optional[frozenset] = None) -> _ChannelCopy:
         """Issue a copy on the earliest-free channel.  ``after`` delays the
         start until another copy lands (eviction -> incoming chaining: the
         incoming copy cannot begin until its space is free).  ``avoid``
         names channels the chooser must skip (quarantined by the mover's
         health machine) — ignored when it would leave no channel at all.
+        ``prefer`` names the channels this copy's tenant *owns* (bandwidth
+        partitioning): the chooser picks the earliest-free preferred
+        channel, but work-conservingly borrows an *idle* non-preferred
+        channel rather than queue behind a busy owned one — a tenant's
+        reserved bandwidth shields it from others, never strands capacity.
 
         Contention: copies active while this one starts are re-rated to the
         equal share ``copy_bw / n`` (their completed bytes are preserved and
@@ -504,6 +514,15 @@ class ChannelSimBackend:
             if healthy:
                 allowed = healthy
         ch = min(allowed, key=lambda c: self._free_at[c])
+        if prefer:
+            pref = [c for c in allowed if c in prefer]
+            if pref:
+                owned = min(pref, key=lambda c: self._free_at[c])
+                if self._free_at[owned] > now:
+                    idle = [c for c in allowed if self._free_at[c] <= now]
+                    ch = min(idle) if idle else owned
+                else:
+                    ch = owned
         start = max(now, self._free_at[ch])
         if after is not None:
             start = max(start, after.done)
@@ -814,6 +833,9 @@ class SlackAwareMover:
         #: slows sim copies by up to ``channels`` x).
         self.straggler_factor = straggler_factor
         self.health = ChannelHealth()
+        #: tenant -> owned copy channels, from the plan's bandwidth
+        #: partition (empty = no tenancy, chooser untouched)
+        self.channel_prefs: Dict[str, frozenset] = {}
         #: DegradedServe / EvictionRollback events, drained by the session
         self.fault_events: List[Any] = []
         self._inflight: Dict[str, Any] = {}      # obj name -> handle
@@ -830,6 +852,9 @@ class SlackAwareMover:
         the new chunk's first move as 'already in flight' and swallow
         it)."""
         self.graph = graph
+        self.channel_prefs = {
+            t: frozenset(chs) for t, chs in
+            (getattr(plan, "tenant_channels", None) or {}).items()}
         for name in list(self._inflight):
             if _handle_orphaned(self.registry, name, self._inflight[name]):
                 self._inflight.pop(name)
@@ -911,8 +936,26 @@ class SlackAwareMover:
             return True
         return (done - start) > deadline
 
+    def _prefer_for(self, name: str) -> Optional[frozenset]:
+        """The channels this object's tenant owns under the plan's
+        bandwidth partition, or None (no tenancy / unowned object)."""
+        if not self.channel_prefs:
+            return None
+        t = tenant_of(name, self.channel_prefs)
+        return self.channel_prefs.get(t) if t is not None else None
+
     def _start_move_raw(self, obj: DataObject, dst: str,
-                        after: Any = None, avoid: Optional[set] = None) -> Any:
+                        after: Any = None, avoid: Optional[set] = None,
+                        prefer: Optional[frozenset] = None) -> Any:
+        if prefer:
+            try:
+                if avoid:
+                    return self.backend.start_move(obj, dst, after=after,
+                                                   avoid=avoid, prefer=prefer)
+                return self.backend.start_move(obj, dst, after=after,
+                                               prefer=prefer)
+            except TypeError:   # backend without tenant channel preference
+                pass
         try:
             if avoid:
                 return self.backend.start_move(obj, dst, after=after,
@@ -928,12 +971,13 @@ class SlackAwareMover:
         late is pointless — demote instead) and by ``retry_limit``."""
         m = entry.op
         avoid = self.health.avoid()
+        prefer = self._prefer_for(m.obj)
         b0 = max(1e-6, 0.1 * entry.duration_s)
         budget = max(entry.slack_s, b0)     # always worth one retry
         backoff, spent, attempts = b0, 0.0, 0
         while True:
             try:
-                return self._start_move_raw(obj, m.dst, after, avoid)
+                return self._start_move_raw(obj, m.dst, after, avoid, prefer)
             except TransientCopyError:
                 attempts += 1
                 spent += backoff
@@ -984,7 +1028,8 @@ class SlackAwareMover:
                 continue
             avoid = {ch} | self.health.avoid()
             try:
-                h2 = self._start_move_raw(obj, h.dst, None, avoid)
+                h2 = self._start_move_raw(obj, h.dst, None, avoid,
+                                          self._prefer_for(name))
             except CopyError:
                 self._fail_inflight(name, h, phase_index,
                                     "straggler_reissue_failed", now)

@@ -57,11 +57,13 @@ from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
 from . import partition as partition_mod
+from . import tenancy as tenancy_mod
 from .data_objects import ObjectRegistry
-from .phase import PhaseGraph
+from .phase import Phase, PhaseGraph
 from .planner import (GlobalContrib, MoveOp, PhaseDecision, PlacementPlan,
                       Planner, ScheduledMove, emit_schedule)
 from .profiler import PhaseProfiler
+from .tenancy import TenantSpec, tenant_of
 from .tiers import MachineProfile
 
 #: canonical stage order of the unimem pipeline
@@ -125,6 +127,16 @@ class PlanProgram(PlacementPlan):
     # measured histogram is adaptively re-binned, so a program records
     # which profiling resolution produced its decisions
     hist_epoch: int = 0
+    # Multi-tenant bandwidth partition (policy="bandwidth_partition"; all
+    # empty on single-workload plans): the fast-tier byte share each
+    # tenant's sub-solve ran under, the copy channels each tenant owns
+    # (consumed by the mover's channel chooser), and the tenants admission
+    # control demoted to serve-from-slow with the reason why.
+    tenant_shares: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tenant_channels: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)
+    tenant_admission: Dict[str, str] = dataclasses.field(
+        default_factory=dict)
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -189,7 +201,11 @@ class PlanProgram(PlacementPlan):
             profile_epoch=self.profile_epoch,
             chunk_generation=self.chunk_generation,
             capacity_bytes=self.capacity_bytes,
-            hist_epoch=self.hist_epoch)
+            hist_epoch=self.hist_epoch,
+            tenant_shares=dict(self.tenant_shares),
+            tenant_channels={t: list(c)
+                             for t, c in self.tenant_channels.items()},
+            tenant_admission=dict(self.tenant_admission))
 
     def to_json(self, **kw: Any) -> str:
         return json.dumps(self.to_dict(), **kw)
@@ -236,7 +252,12 @@ class PlanProgram(PlacementPlan):
             profile_epoch=d["profile_epoch"],
             chunk_generation=d["chunk_generation"],
             capacity_bytes=d["capacity_bytes"],
-            hist_epoch=d.get("hist_epoch", 0))
+            hist_epoch=d.get("hist_epoch", 0),
+            tenant_shares={t: int(v) for t, v in
+                           d.get("tenant_shares", {}).items()},
+            tenant_channels={t: [int(c) for c in chs] for t, chs in
+                             d.get("tenant_channels", {}).items()},
+            tenant_admission=dict(d.get("tenant_admission", {})))
 
     @classmethod
     def from_json(cls, s: str) -> "PlanProgram":
@@ -275,6 +296,10 @@ class PipelineState:
     global_contribs: List[GlobalContrib] = dataclasses.field(
         default_factory=list)
     graph_digest: Optional[tuple] = None
+    # declared tenant QoS contracts (None = single-workload pipeline) and
+    # the partition the bandwidth_partition solve produced
+    tenants: Optional[Dict[str, TenantSpec]] = None
+    tenant_solution: Optional[Dict[str, Any]] = None
 
     def record(self, policy: str, stage: str, detail: str = "") -> None:
         self.provenance.append(StageProvenance(
@@ -521,6 +546,151 @@ def stage_solve_interval(state: PipelineState,
                  f"interval: {len(moves)} moves, decay={decay:g}")
 
 
+def stage_solve_bandwidth_partition(
+        state: PipelineState, policy: str = "bandwidth_partition") -> None:
+    """Multi-tenant solve: admission control, QoS-weighted partitioning of
+    the fast tier and the copy channels, then one scoped Unimem local
+    solve per admitted tenant under its own byte share.
+
+    The partition is computed by :mod:`.tenancy`: capacity water-fills by
+    ``priority/slo`` weight capped at each tenant's demand (unused shares
+    redistribute work-conservingly), channels apportion by largest
+    remainder so every channel is owned by exactly one tenant.  Each
+    admitted tenant then gets an *isolated* knapsack: a phase graph
+    filtered to its namespace and a throwaway planner whose capacity is
+    the tenant's share — so one whale can never out-bid the tail inside a
+    shared knapsack, which is the entire point.  Demoted tenants' fast
+    residents are evicted at phase 0 and the demotion is recorded in
+    ``tenant_admission`` (the session logs ``DegradedServe`` provenance
+    from it).  Objects outside every declared namespace form a pseudo
+    tenant with neutral weight.  With **no** tenants declared this stage
+    is byte-for-byte :func:`stage_solve` — single-workload plans stay
+    bit-identical to the unimem pipeline."""
+    tenants = state.tenants
+    if not tenants:
+        stage_solve(state, policy)
+        return
+    graph, reg, planner = state.graph, state.registry, state.planner
+    cap = planner.capacity
+    member: Dict[str, str] = {}     # object -> tenant key ("" = unowned)
+    for o in reg:
+        t = tenant_of(o.name, tenants)
+        member[o.name] = t if t is not None else ""
+    # every declared tenant partitions even when idle; the pseudo tenant
+    # only exists if unowned objects are actually referenced
+    class _Pseudo:
+        weight = 1.0
+    specs: Dict[str, Any] = dict(tenants)
+    referenced = {o for ph in graph for o, v in ph.refs.items() if v > 0.0}
+    if any(member.get(o, "") == "" for o in referenced):
+        specs[""] = _Pseudo()
+    demand = {t: 0 for t in specs}
+    traffic = {t: 0.0 for t in specs}
+    hot = {t: 0 for t in specs}
+    for ph in graph:
+        per_phase: Dict[str, int] = {}
+        for o, v in ph.refs.items():
+            if v <= 0.0 or o not in reg:
+                continue
+            t = member.get(o, "")
+            if t not in specs:
+                continue
+            traffic[t] += v
+            per_phase[t] = per_phase.get(t, 0) + reg[o].size_bytes
+        for t, b in per_phase.items():
+            hot[t] = max(hot[t], b)
+    for o in reg:
+        t = member.get(o.name, "")
+        if t in specs and o.name in referenced:
+            demand[t] += o.size_bytes
+    # admission: only declared tenants can be demoted (the pseudo tenant
+    # is the shared substrate, not a QoS contract)
+    demoted = tenancy_mod.admission_control(
+        tenants, traffic, demand, cap,
+        heat_floor=state._cfg("tenant_admission_heat", 0.0) or 0.0,
+        churn_guard=state._cfg("tenant_churn_guard", None),
+        hot_bytes=hot)
+    admitted = {t: s for t, s in specs.items() if t not in demoted}
+    shares = tenancy_mod.capacity_shares(cap, admitted, demand)
+    channels = tenancy_mod.channel_shares(
+        state._cfg("copy_channels", 2) or 1,
+        {t: s for t, s in admitted.items() if t in tenants})
+    size = lambda o: reg[o].size_bytes
+    moves: List[MoveOp] = []
+    placements = [set() for _ in graph]
+    n_ph = len(graph)
+    B = graph.iteration_time()
+    gain_bw = [0.0] * n_ph
+    gain_lat = [0.0] * n_ph
+    predicted = B
+    for t in sorted(admitted):
+        mem = {n for n, owner in member.items() if owner == t}
+        fgraph = PhaseGraph([
+            Phase(ph.index, ph.name, ph.kind,
+                  {o: v for o, v in ph.refs.items() if o in mem}, ph.time)
+            for ph in graph])
+        share = shares.get(t, 0)
+        sub = Planner(state.machine, reg, planner.cf, share,
+                      vectorized=planner.vectorized,
+                      enact_consistent=planner.enact_consistent)
+        # Entry residency can overshoot the share: evictions are issued
+        # lazily, so a rebuild mid-rotation (e.g. a calibration fold)
+        # snapshots fast bytes whose departures were booked by the old
+        # plan.  The local solve keeps entry residents it was never asked
+        # to fetch, so an unclamped entry would bake the overshoot in as
+        # permanent residency beyond the share.  Shed the lowest-traffic
+        # residents down to the share and evict them at phase 0.
+        init = {o.name for o in reg if o.tier == "fast" and o.name in mem}
+        over = sum(size(o) for o in init) - share
+        if over > 0:
+            traffic_of = {n: 0.0 for n in init}
+            for ph in fgraph:
+                for o, v in ph.refs.items():
+                    if o in traffic_of and v > 0.0:
+                        traffic_of[o] += v
+            for n in sorted(init, key=lambda n: (
+                    traffic_of[n] / max(size(n), 1), n)):
+                if over <= 0:
+                    break
+                if reg[n].pinned:
+                    continue
+                init.discard(n)
+                over -= size(n)
+                moves.append(MoveOp(n, "slow", 0, 0, size(n),
+                                    size(n) / state.machine.copy_bw))
+        sub._initial_residents = lambda init=init: set(init)
+        local = sub.plan_local(fgraph, state.profiler)
+        moves.extend(local.moves)
+        for i, residents in enumerate(local.residents[:n_ph]):
+            placements[i] |= residents
+        predicted -= max(0.0, B - local.predicted_iteration_time)
+        for i in range(min(n_ph, len(local.phase_gain_bw))):
+            gain_bw[i] += local.phase_gain_bw[i]
+        for i in range(min(n_ph, len(local.phase_gain_lat))):
+            gain_lat[i] += local.phase_gain_lat[i]
+    # demoted tenants serve from slow: evict their fast residents so
+    # admitted tenants actually get the capacity the shares promise
+    for t in sorted(demoted):
+        for o in sorted(n for n, owner in member.items() if owner == t):
+            if o in reg and reg[o].tier == "fast" and not reg[o].pinned:
+                moves.append(MoveOp(o, "slow", 0, 0, size(o),
+                                    size(o) / state.machine.copy_bw))
+    state.plan = PlacementPlan(
+        "bandwidth_partition", placements, moves, max(0.0, predicted), B,
+        phase_baseline=[ph.time for ph in graph],
+        phase_gain_bw=gain_bw, phase_gain_lat=gain_lat)
+    state.tenant_solution = dict(
+        shares={t: int(v) for t, v in shares.items()},
+        channels={t: list(c) for t, c in channels.items()},
+        admission=dict(demoted))
+    state.record(
+        policy, "solve",
+        f"{len(admitted)} tenants admitted, {len(demoted)} demoted; "
+        + ";".join(f"{t or '<unowned>'}:{shares.get(t, 0)}B"
+                   f"+ch{channels.get(t, [])}"
+                   for t in sorted(specs)))
+
+
 def stage_schedule(state: PipelineState, policy: str = "unimem") -> None:
     """Annotate every move with its copy window, duration and slack — the
     schedule the slack-aware mover releases most-urgent-first.  The
@@ -605,6 +775,38 @@ class IntervalPolicy(UnimemPolicy):
               stage_solve_interval, stage_schedule)
 
 
+class BandwidthPartitionPolicy(UnimemPolicy):
+    """Multi-tenant QoS policy (the stage slot named open since PR 4):
+    the solve stage is replaced by admission control + QoS-weighted
+    partitioning of fast-tier capacity and copy channels + one isolated
+    Unimem local solve per admitted tenant, while the characterization
+    stages — attribute, partition, coalesce — and the schedule stage are
+    reused unchanged.  The program additionally carries
+    ``tenant_shares`` / ``tenant_channels`` / ``tenant_admission``; the
+    mover consumes the channel ownership map for its chooser.  With no
+    tenants declared the pipeline is bit-identical to ``unimem``.
+
+    Scoped standing-plan reuse is disabled for multi-tenant solves (the
+    merged plan records no per-phase decisions to reuse); each rebuild
+    re-partitions and re-solves, which is what admission control needs
+    anyway — shares must track the live traffic mix."""
+
+    name = "bandwidth_partition"
+    stages = (stage_attribute, stage_partition, stage_coalesce,
+              stage_solve_bandwidth_partition, stage_schedule)
+
+    def build(self, state: PipelineState) -> Optional[PlanProgram]:
+        program = super().build(state)
+        if program is not None and state.tenant_solution:
+            program.tenant_shares = dict(state.tenant_solution["shares"])
+            program.tenant_channels = {
+                t: list(c)
+                for t, c in state.tenant_solution["channels"].items()}
+            program.tenant_admission = dict(
+                state.tenant_solution["admission"])
+        return program
+
+
 # ---------------------------------------------------------------------------
 # registry (mirrors core.backends)
 # ---------------------------------------------------------------------------
@@ -638,3 +840,5 @@ def make_policy(name: str, **options: Any) -> PlacementPolicy:
 register_policy("unimem", lambda **_: UnimemPolicy())
 register_policy("lru", lambda **_: LruPolicy())
 register_policy("interval", lambda **_: IntervalPolicy())
+register_policy("bandwidth_partition",
+                lambda **_: BandwidthPartitionPolicy())

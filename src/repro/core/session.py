@@ -49,7 +49,8 @@ from . import initial as initial_mod
 from . import perfmodel
 from . import policy as policy_mod
 from .data_objects import DataObject, ObjectRegistry
-from .faults import ChaosBackend, CopyError, DegradedServe, FaultSpec
+from .faults import (ChaosBackend, CopyError, DegradedServe, FaultLog,
+                     FaultSpec)
 from .instrumentation import InstrumentationSource, PhaseSample
 from .monitor import VariationMonitor
 from .mover import (ProactiveMover, SlackAwareMover, TierBackend,
@@ -58,6 +59,7 @@ from .perfmodel import CalibrationConstants
 from .phase import Phase, PhaseGraph, PhaseTraceEvent
 from .planner import MoveOp, PlacementPlan, Planner, emit_schedule
 from .profiler import PhaseProfiler
+from .tenancy import TenantHandle, TenantSpec, tenant_of
 from .tiers import MachineProfile
 
 
@@ -161,6 +163,24 @@ class RuntimeConfig:
     # 4.0 when a fault_spec is set (channel contention alone legitimately
     # costs up to copy_channels x) and stays off otherwise.
     straggler_factor: Optional[float] = None
+    # Ring-buffer bound on session.fault_log: long-running chaos/serving
+    # loops keep only the most recent entries while the dropped-entry
+    # counter keeps provenance counts exact.  0/None = unbounded.
+    fault_log_limit: int = 1024
+    # Continuous calibration: with calibrate_feedback on, re-arm a
+    # measurement (and fold, if the error warrants one) every Nth
+    # iteration instead of only once per (re)plan epoch — the background
+    # controller for drift the monitor's threshold never trips.  None
+    # (default) keeps the per-epoch cadence and is bitwise identical.
+    calibrate_every: Optional[int] = None
+    # Admission control (bandwidth_partition policy): a tenant whose
+    # access density falls below this fraction of the mean across
+    # trafficked tenants is demoted to serve-from-slow.  0 disables.
+    tenant_admission_heat: float = 0.1
+    # Optional churn guard: a tenant whose per-phase hot set exceeds this
+    # factor times its capacity share is demoted (its share could never
+    # hold a useful fraction of any working set).  None = off.
+    tenant_churn_guard: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -273,9 +293,13 @@ class Session:
         # DegradedServe/EvictionRollback events (stamped with iteration),
         # the audit counters, and the per-iteration/per-epoch flags that
         # trigger auto-audits and fault provenance.
-        self.fault_log: List[Any] = []
+        self.fault_log = FaultLog(self.config.fault_log_limit)
         self.n_degraded_serves = 0
         self.n_eviction_rollbacks = 0
+        self.n_admission_demotions = 0
+        # Tenant namespaces (core/tenancy.py): declared QoS contracts,
+        # consumed by the bandwidth_partition policy and fault provenance.
+        self.tenants: Dict[str, TenantSpec] = {}
         self.n_audits = 0
         self.n_audit_violations = 0
         self.n_heals = 0
@@ -341,6 +365,29 @@ class Session:
         if static_refs is not None:
             self._static_refs[name] = static_refs
         return obj
+
+    def tenant(self, name: str, *, priority: float = 1.0,
+               slo: float = 1.0) -> TenantHandle:
+        """Declare (or re-fetch) a tenant namespace.
+
+        The returned handle scopes ``register``/``phase`` under
+        ``"<name>/"``, so two tenants may both register a ``"kv"`` object
+        (distinct qualified names) while a same-tenant duplicate still
+        trips the registry's duplicate check.  Access attribution,
+        profiles, capacity/channel shares, and fault-log entries all
+        carry the tenant id via the name prefix.  Re-declaring an
+        existing tenant with different QoS parameters is an error —
+        contracts don't silently drift mid-run."""
+        spec = TenantSpec(name, priority=priority, slo=slo)
+        have = self.tenants.get(name)
+        if have is not None:
+            if have != spec:
+                raise ValueError(
+                    f"tenant {name!r} already declared with "
+                    f"priority={have.priority:g}, slo={have.slo:g}")
+            return TenantHandle(self, have)
+        self.tenants[name] = spec
+        return TenantHandle(self, spec)
 
     def attach_source(self, source: Optional[InstrumentationSource]) -> None:
         """Install the instrumentation source consulted at every phase exit
@@ -642,6 +689,17 @@ class Session:
             self._measure_pending = False
             self._on_baseline_measured(self._iter_elapsed_s
                                        + self._iter_stall_s)
+        # Continuous calibration: every Nth iteration re-arms a settled
+        # measurement so the feedback keeps folding between plan epochs
+        # (per-epoch measurements stay the primary signal — the periodic
+        # re-arm only fires when no measurement is already in flight).
+        N = self.config.calibrate_every
+        if (N and self.config.calibrate_feedback and self.plan is not None
+                and not self._profiling and not self._baseline_pending
+                and not self._measure_pending and not self._measuring_baseline
+                and self._iteration % N == 0):
+            self._measure_pending = True
+            self._cal_rounds_left = max(self._cal_rounds_left, 1)
         # any failure path this iteration triggers the tier-state audit
         # (self-healing); heal-time correctives may fault too — drain them
         self._drain_mover_faults()
@@ -662,6 +720,8 @@ class Session:
         n = self._plan_n_phases or len(self._phase_names) or 1
         for ev in events:
             ev.iteration = self._iteration
+            if self.tenants and getattr(ev, "tenant", None) is None:
+                ev.tenant = tenant_of(ev.obj, self.tenants)
             self.fault_log.append(ev)
             if isinstance(ev, DegradedServe):
                 self.n_degraded_serves += 1
@@ -765,7 +825,8 @@ class Session:
         return policy_mod.PipelineState(
             machine=self.machine, registry=self.registry, graph=self.graph,
             profiler=self.profiler, planner=self.planner,
-            capacity=self.capacity, config=self.config, standing=standing)
+            capacity=self.capacity, config=self.config, standing=standing,
+            tenants=dict(self.tenants) if self.tenants else None)
 
     def _build_plan(self, *, recalibration: bool = False) -> None:
         assert self.graph is not None
@@ -784,6 +845,17 @@ class Session:
                 hist_epoch=getattr(self.profiler, "hist_epoch", 0)))
         self._degraded_since_plan = 0
         self._rollbacks_since_plan = 0
+        # Admission-control provenance: every tenant the bandwidth
+        # partition demoted to serve-from-slow this epoch gets a
+        # DegradedServe entry (phase -1 = whole-tenant, not one fetch).
+        # Logged directly — not via mover fault_events — so the chaos
+        # counters and the fault-triggered audit stay untouched.
+        for t, why in sorted(
+                (getattr(self.plan, "tenant_admission", None) or {}).items()):
+            self.n_admission_demotions += 1
+            self.fault_log.append(DegradedServe(
+                obj=t, phase_index=-1, reason=f"admission:{why}",
+                iteration=self._iteration, tenant=t))
         if not recalibration:
             # a profiling-driven build opens a new plan epoch: re-arm the
             # calibration-correction budget and the best-measured memory
@@ -896,7 +968,7 @@ class Session:
         new_cf = perfmodel.fold_online(
             self.cf, gain_bw=mult_bw, gain_lat=mult_lat, move=mult_move,
             blend=self.config.calibration_blend,
-            note=f"iter{self._iteration}")
+            note=self._fold_note())
         if new_cf is self.cf:
             return
         if self._cal_snapshot is None:
@@ -907,6 +979,23 @@ class Session:
         self.planner.cf = new_cf
         self._cf_dirty = True
         self._build_plan(recalibration=True)
+
+    def _fold_note(self) -> str:
+        """Provenance note for an online CF fold.  With tenants declared,
+        names the namespaces whose phases contributed measurements this
+        iteration, so a fold's origin is attributable per tenant."""
+        note = f"iter{self._iteration}"
+        if not self.tenants:
+            return note
+        seen = set()
+        for idx in self._iter_phase_elapsed:
+            if 0 <= idx < len(self._phase_names):
+                t = tenant_of(self._phase_names[idx], self.tenants)
+                if t is not None:
+                    seen.add(t)
+        if seen:
+            note += "[" + ",".join(sorted(seen)) + "]"
+        return note
 
     def _restore_plan(self, plan: PlacementPlan) -> None:
         """Re-enact a previously measured plan from the live tier state.
@@ -1070,6 +1159,10 @@ class Session:
             n_retries=mv.n_retries if mv else 0,
             n_degraded_serves=self.n_degraded_serves,
             n_eviction_rollbacks=self.n_eviction_rollbacks,
+            fault_log_dropped=getattr(self.fault_log, "dropped", 0),
+            # multi-tenancy (zero / empty without declared tenants)
+            n_tenants=len(self.tenants),
+            n_admission_demotions=self.n_admission_demotions,
             n_straggler_reissues=mv.n_straggler_reissues if mv else 0,
             n_audits=self.n_audits,
             n_audit_violations=self.n_audit_violations,

@@ -10,6 +10,7 @@ blocks can live on the host tier.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -39,36 +40,73 @@ class ServeStats:
 
 
 class ServeEngine:
-    """Minimal batched serving loop (greedy)."""
+    """Minimal batched serving loop (greedy) on the Runtime API v2.
+
+    With a ``runtime`` (a v2 :class:`~repro.core.session.Session` /
+    ``UnimemRuntime``), the engine is a serving *front-end*: params and the
+    KV cache are registered as runtime data objects (sizes only — jit owns
+    the buffers), every ``generate`` call is one runtime iteration, and
+    prefill/decode run as instrumented phases, so the runtime profiles the
+    cache traffic and plans tier placement across calls.  ``tenant`` scopes
+    all of it to a tenant namespace (``rt.tenant(tenant, ...)``): object
+    and phase names carry the ``tenant/`` prefix, so one runtime can host
+    many engines — one per request stream — and the bandwidth-partition
+    policy splits the fast tier between them by the (priority, slo)
+    contract.  ``runtime=None`` keeps the plain jit loop, untouched."""
 
     def __init__(self, cfg: ArchConfig, params: Any, *, max_seq: int,
-                 batch: int, runtime=None):
+                 batch: int, runtime=None, tenant: Optional[str] = None,
+                 priority: float = 1.0, slo: float = 1.0):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.batch = batch
         self.runtime = runtime
+        self._ns = None       # registration namespace: tenant handle or rt
+        self._registered = False
+        if runtime is not None:
+            self._ns = (runtime.tenant(tenant, priority=priority, slo=slo)
+                        if tenant else runtime)
         self.step = jax.jit(build_decode_step(cfg))
         self.stats = ServeStats()
+
+    # ------------------------------------------------------------------
+    def _register(self, cache: Any) -> None:
+        if self._ns is None or self._registered:
+            return
+        self._ns.register("params", self.params, manage_payload=False,
+                          pinned=True)
+        self._ns.register("kv_cache", cache, manage_payload=False,
+                          chunkable=True)
+        self._registered = True
+
+    def _phase(self, name: str):
+        return (contextlib.nullcontext() if self._ns is None
+                else self._ns.phase(name))
 
     def generate(self, prompts: jax.Array, n_new: int) -> jax.Array:
         """prompts: (B, P) int32.  Returns (B, P + n_new)."""
         B, P = prompts.shape
         assert B == self.batch
         cache = lm.init_cache(self.cfg, B, self.max_seq)
-        tok = prompts[:, 0]
-        out = [prompts]
-        # prefill by scanned decode (uniform across cache families)
-        for i in range(P):
-            nxt, _, cache = self.step(self.params, cache, prompts[:, i],
-                                      jnp.int32(i))
-            self.stats.prefill_tokens += B
-        tok = nxt
-        gen = []
-        for j in range(n_new):
-            gen.append(tok[:, None])
-            nxt, _, cache = self.step(self.params, cache, tok,
-                                      jnp.int32(P + j))
+        self._register(cache)
+        with (self.runtime.iteration() if self.runtime is not None
+              else contextlib.nullcontext()):
+            tok = prompts[:, 0]
+            out = [prompts]
+            # prefill by scanned decode (uniform across cache families)
+            with self._phase("prefill"):
+                for i in range(P):
+                    nxt, _, cache = self.step(self.params, cache,
+                                              prompts[:, i], jnp.int32(i))
+                    self.stats.prefill_tokens += B
             tok = nxt
-            self.stats.decode_tokens += B
-        return jnp.concatenate(out + gen, axis=1)
+            gen = []
+            with self._phase("decode"):
+                for j in range(n_new):
+                    gen.append(tok[:, None])
+                    nxt, _, cache = self.step(self.params, cache, tok,
+                                              jnp.int32(P + j))
+                    tok = nxt
+                    self.stats.decode_tokens += B
+            return jnp.concatenate(out + gen, axis=1)

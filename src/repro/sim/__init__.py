@@ -9,6 +9,7 @@ from .workloads import (cg_like, ft_like, bt_like, lu_like, sp_like, mg_like,
                         graph_chase, graph_chase_skewed, paged_attention,
                         power_law_density,
                         SCENARIO_WORKLOADS, SKEWED_SCENARIO_WORKLOADS,
+                        tenant_serving, TENANT_SERVING_QOS,
                         chaos_gated_spec, chaos_heavy_spec,
                         CHAOS_FAULT_PROFILES)
 
@@ -21,5 +22,6 @@ __all__ = [
     "kv_serving", "kv_serving_skewed", "moe_expert_churn", "graph_chase",
     "graph_chase_skewed", "paged_attention", "power_law_density",
     "SCENARIO_WORKLOADS", "SKEWED_SCENARIO_WORKLOADS",
+    "tenant_serving", "TENANT_SERVING_QOS",
     "chaos_gated_spec", "chaos_heavy_spec", "CHAOS_FAULT_PROFILES",
 ]

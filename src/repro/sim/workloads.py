@@ -604,6 +604,110 @@ SCENARIO_WORKLOADS = {
     "fsdp_buckets": fsdp_grad_buckets,
 }
 
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving — the tenancy layer's target workload.
+# Driven directly by ``bench_tenants`` (not part of SCENARIO_WORKLOADS: it
+# needs per-tenant registration through ``rt.tenant()`` handles, which the
+# generic scenario runner does not do).
+# ---------------------------------------------------------------------------
+
+#: tenant -> (priority, slo) for ``tenant_serving``.  Popularity across
+#: tenants is Zipf-like: one whale absorbs most of the traffic, three mid
+#: tenants split a thin tail, and one cold archive tenant barely shows up.
+#: The whale's priority and the mids' tight SLO (0.75 = stricter latency
+#: budget => more weight per unit priority) give fast-tier weights 8 : 4/3
+#: : 1/2 — whale share 2/3 of capacity, mids 1/9 each.
+TENANT_SERVING_QOS = {
+    "whale": (8.0, 1.0),
+    "m0": (1.0, 0.75),
+    "m1": (1.0, 0.75),
+    "m2": (1.0, 0.75),
+    "cold": (0.5, 1.0),
+}
+
+
+def tenant_serving(scale: float = 1.0, n_rounds: int = 8,
+                   whale_compute_s: float = 0.060) -> SimWorkload:
+    """Multi-tenant KV-serving: one whale, three mid tenants, one cold.
+
+    Each round interleaves one whale decode phase with one decode phase per
+    mid tenant; a trailing archive scan touches the cold tenant's state.
+    All object and phase names carry ``tenant/`` prefixes — the runtime's
+    tenant namespaces — so per-tenant latency can be read straight off the
+    phase trace.
+
+    The QoS tension the bandwidth-partition policy has to resolve:
+
+    * The *whale* is a long-context stream — big weights, a 12-position
+      KV-block ring with a 2-wide hot window sliding one position per
+      round, and deep-history attention over positions 2-3 behind it.
+      Its per-phase working set (weights + 4 block pairs = 128 MB) just
+      fits the whale's QoS share, so the partitioned solve can rotate
+      the ring under the whale's compute-rich phases — but the ring's
+      per-iteration sweep (~256 MB) dwarfs any share, and the deep
+      history's per-byte traffic is *higher* than the mid tenants' hot
+      windows, so an aggregate optimizer spends the last of the fast
+      tier on whale ring blocks instead of mid windows.
+    * The *mids* are short-context decoders whose phases are memory-bound:
+      every byte of their hot window served from slow lands directly on
+      their (small) phase time.  Starving them is cheap in aggregate time
+      and catastrophic in per-tenant p99.
+    * The *cold* tenant's archive sees ~0.05 sweeps/iteration — below any
+      sensible admission heat floor; it should be demoted to
+      serve-from-slow, not squat in fast capacity.
+    """
+    s = scale
+    objects: Dict[str, int] = {}
+    # whale: 64 MB weights + 12 K/V block pairs of 8 MB
+    objects["whale/w"] = int(64 * MB * s)
+    n_blk, blk = 12, int(8 * MB * s)
+    for b in range(n_blk):
+        objects[f"whale/k{b:02d}"] = blk
+        objects[f"whale/v{b:02d}"] = blk
+    # mids: 8 MB weights + 8 K/V block pairs of 3 MB each — hot set
+    # (weights + 2-position window = 20 MB) sized to fit a mid tenant's
+    # fast-tier share, so the partitioned solve can serve a mid fully
+    m_blk_n, m_blk = 8, int(3 * MB * s)
+    for m in range(3):
+        objects[f"m{m}/w"] = int(8 * MB * s)
+        for b in range(m_blk_n):
+            objects[f"m{m}/k{b:02d}"] = m_blk
+            objects[f"m{m}/v{b:02d}"] = m_blk
+    objects["cold/archive"] = int(96 * MB * s)
+
+    phases: List[SimPhaseSpec] = []
+    for p in range(n_rounds):
+        # whale decode: hot window @3.0 sweeps, deep history (2-3 positions
+        # back) @2.5 — per-byte deep traffic ~5 sweeps/iter, above the mid
+        # windows' ~4, so the aggregate knapsack prefers whale ring blocks
+        # over mid hot windows once weights + windows are placed.
+        touches: Dict[str, SimObjectAccess] = {
+            "whale/w": _acc(objects["whale/w"], 1.0, 1.0)}
+        hot = [(p + k) % n_blk for k in range(2)]
+        for b in hot:
+            touches[f"whale/k{b:02d}"] = _acc(blk, 3.0, 1.0)
+            touches[f"whale/v{b:02d}"] = _acc(blk, 3.0, 1.0)
+        for back in range(2, 4):
+            b = (p - back) % n_blk
+            if b not in hot:
+                touches[f"whale/k{b:02d}"] = _acc(blk, 2.5, 1.0)
+                touches[f"whale/v{b:02d}"] = _acc(blk, 2.5, 1.0)
+        phases.append(SimPhaseSpec(f"whale/decode{p}", whale_compute_s,
+                                   touches))
+        # mid decodes: memory-bound (compute ~ fast-tier mem time)
+        for m in range(3):
+            mt: Dict[str, SimObjectAccess] = {
+                f"m{m}/w": _acc(objects[f"m{m}/w"], 1.0, 1.0)}
+            mhot = [(p + k) % m_blk_n for k in range(2)]
+            for b in mhot:
+                mt[f"m{m}/k{b:02d}"] = _acc(m_blk, 2.0, 1.0)
+                mt[f"m{m}/v{b:02d}"] = _acc(m_blk, 2.0, 1.0)
+            phases.append(SimPhaseSpec(f"m{m}/decode{p}", 0.004, mt))
+    phases.append(SimPhaseSpec("cold/scan", 0.004, {
+        "cold/archive": _acc(objects["cold/archive"], 0.05, 1.0)}))
+    return SimWorkload("tenant_serving", phases, objects)
+
 # Skewed variants: the hot-chunk placement pipeline's target workloads.
 # Separate registry so the golden virtual-time traces of the base matrix
 # stay pinned; benchmarked in ``bench_scenarios`` against the uniform
