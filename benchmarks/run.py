@@ -514,6 +514,44 @@ def bench_tenants() -> None:
     write_rows("tenants.csv", "scenario_tenant")
 
 
+# ------------------------------------- multi-host cluster coordination
+def bench_multihost() -> None:
+    """Multi-host tier management's gated row: ``moe_churn_multihost``
+    (4 virtual hosts, one host's expert shard hot past DRAM capacity
+    after router churn, peers idle with spare capacity).
+
+    Host-local-only management leaves the hot host serving surplus
+    experts from NVM; the cluster coordinator re-homes them to peers
+    over the modeled interconnect (cross_host backend).  Gated
+    quantities: ``hot_gain`` — the hot host's steady iteration time,
+    local-only over coordinated (nightly floor 1.10) — and
+    ``cluster_gain`` — the same ratio on the slowest host (the cluster's
+    effective iteration time).  ``migration_ms`` records the one-time
+    virtual-time cost of the pulls over the apportioned link pairs."""
+    from repro.sim import ClusterSimulation, moe_churn_multihost
+
+    machine, wl, links, knobs = moe_churn_multihost()
+    sim = ClusterSimulation(machine, wl, links=links, **knobs)
+    t0 = time.perf_counter()
+    local = sim.run_local_only(12)
+    coord = sim.run_coordinated(12)
+    us = (time.perf_counter() - t0) * 1e6
+    hot = "h0"
+    hot_gain = local.steady_time(hot) / coord.steady_time(hot)
+    cluster_gain = local.cluster_steady_time / coord.cluster_steady_time
+    pulls = [m for m in coord.migrations if m.mode == "cross_host"]
+    derived = [f"hot_gain={hot_gain:.3f}",
+               f"cluster_gain={cluster_gain:.3f}",
+               f"n_migrations={len(pulls)}",
+               f"migrated_mb={sum(m.size_bytes for m in pulls) / MB:.0f}",
+               f"migration_ms={coord.migration_s * 1e3:.2f}"]
+    for h in wl.hosts():
+        derived.append(f"{h}_local_ms={local.steady_time(h) * 1e3:.2f}")
+        derived.append(f"{h}_coord_ms={coord.steady_time(h) * 1e3:.2f}")
+    emit("multihost_moe_churn", us, ";".join(derived))
+    write_rows("multihost.csv", "multihost_")
+
+
 # ------------------------------ planner latency: vectorized vs pre-PR path
 def bench_planner() -> None:
     """Plan-construction latency vs registry size.
@@ -682,6 +720,7 @@ BENCHES = {
     "scenarios": bench_scenarios,
     "chaos": bench_chaos,
     "tenants": bench_tenants,
+    "multihost": bench_multihost,
     "planner": bench_planner,
     "kernels": bench_kernels,
 }

@@ -5,17 +5,19 @@ from .backends import available_backends, make_backend, register_backend
 from .data_objects import DataObject, ObjectRegistry
 from .faults import (ChannelHealth, ChaosBackend, CopyError, CopyFailedError,
                      CopyTimeoutError, DegradedServe, EvictionRollback,
-                     FaultLog, FaultSpec, TransientCopyError)
+                     FaultLog, FaultSpec, TransientCopyError, host_sub_seed)
 from .histogram import Histogram, uniform_mass
 from .instrumentation import (InstrumentationSource, ManualSource,
                               PhaseSample, XlaCostAnalysisSource)
 from .knapsack import Item, solve as knapsack_solve
 from .monitor import VariationMonitor
 from .mover import (AsyncJaxTierBackend, ChannelSimBackend, CpuPoolBackend,
-                    JaxTierBackend, MoveRecord, ProactiveMover,
-                    SimTierBackend, SlackAwareMover)
-from .perfmodel import (CalibrationConstants, Sensitivity, benefit, calibrate,
-                        classify, consumed_bandwidth, movement_cost, weight)
+                    CrossHostBackend, JaxTierBackend, MoveRecord,
+                    ProactiveMover, SimTierBackend, SlackAwareMover)
+from .perfmodel import (CalibrationConstants, InterconnectModel, LinkSpec,
+                        Sensitivity, benefit, calibrate, classify,
+                        consumed_bandwidth, cross_host_cost,
+                        link_transfer_time, movement_cost, weight)
 from .phase import (Phase, PhaseGraph, PhaseKind, PhaseTraceEvent,
                     build_phase_graph)
 from .planner import (MoveOp, PhaseDecision, PlacementPlan, Planner,
@@ -26,8 +28,9 @@ from .policy import (BandwidthPartitionPolicy, PipelineState, PlacementPolicy,
 from .profiler import ObjectPhaseProfile, PhaseProfiler
 from .runtime import RuntimeConfig, UnimemRuntime
 from .session import PhaseContext, Session, TierAudit
-from .tenancy import (TENANT_SEP, TenantHandle, TenantSpec, capacity_shares,
-                      channel_shares, per_tenant_p99, tenant_of)
+from .tenancy import (TENANT_SEP, TenantHandle, TenantSpec, apportion,
+                      capacity_shares, channel_shares, per_tenant_p99,
+                      tenant_of)
 from .tiers import (MachineProfile, TierSpec, PROFILES, PAPER_DRAM_NVM,
                     STT_RAM, PCRAM, RERAM, TPU_V5E, TPU_V5E_VMEM,
                     V5E_PEAK_FLOPS_BF16, V5E_HBM_BW, V5E_ICI_BW)
@@ -43,12 +46,13 @@ __all__ = [
     "XlaCostAnalysisSource", "Session", "PhaseContext", "TierAudit",
     "ChannelHealth", "ChaosBackend", "CopyError", "CopyFailedError",
     "CopyTimeoutError", "DegradedServe", "EvictionRollback", "FaultLog",
-    "FaultSpec", "TransientCopyError",
-    "TENANT_SEP", "TenantHandle", "TenantSpec", "capacity_shares",
-    "channel_shares", "per_tenant_p99", "tenant_of",
-    "BandwidthPartitionPolicy",
-    "CalibrationConstants", "Sensitivity", "benefit", "calibrate", "classify",
-    "consumed_bandwidth", "movement_cost", "weight",
+    "FaultSpec", "TransientCopyError", "host_sub_seed",
+    "TENANT_SEP", "TenantHandle", "TenantSpec", "apportion",
+    "capacity_shares", "channel_shares", "per_tenant_p99", "tenant_of",
+    "BandwidthPartitionPolicy", "CrossHostBackend",
+    "CalibrationConstants", "InterconnectModel", "LinkSpec", "Sensitivity",
+    "benefit", "calibrate", "classify", "consumed_bandwidth",
+    "cross_host_cost", "link_transfer_time", "movement_cost", "weight",
     "Phase", "PhaseGraph", "PhaseKind", "PhaseTraceEvent", "build_phase_graph",
     "MoveOp", "PhaseDecision", "PlacementPlan", "Planner", "ScheduledMove",
     "emit_schedule",

@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, List
 
 from .faults import ChaosBackend, FaultSpec
 from .mover import (AsyncJaxTierBackend, ChannelSimBackend, CpuPoolBackend,
-                    JaxTierBackend, SimTierBackend)
+                    CrossHostBackend, JaxTierBackend, SimTierBackend)
 from .tiers import MachineProfile
 
 BackendFactory = Callable[..., Any]
@@ -76,6 +76,21 @@ def _cpu_pool_factory(machine: MachineProfile, *, pool_workers: int = 2,
     return CpuPoolBackend(machine, workers=pool_workers)
 
 
+def _cross_host_factory(machine: MachineProfile, *, links=None, now_fn=None,
+                        default_link=None, on_land=None, **_: Any):
+    """Shard-migration engine over modeled interconnect links: prices
+    peer-host pulls with per-link bandwidth/latency and a bounded number
+    of send/recv channel pairs per link.  ``links`` is an
+    :class:`~.perfmodel.InterconnectModel` (or a ``{(src, dst): LinkSpec}``
+    mapping; ``default_link`` prices unnamed pairs)."""
+    from .perfmodel import InterconnectModel
+    if not isinstance(links, InterconnectModel):
+        links = InterconnectModel(links, default=default_link)
+    if now_fn is None:
+        now_fn = lambda: 0.0            # noqa: E731 — static virtual clock
+    return CrossHostBackend(links, now_fn, on_land=on_land)
+
+
 def _chaos_factory(machine: MachineProfile, *, chaos_inner: str = "jax_async",
                    fault_spec=None, **options: Any):
     """Fault-injecting decorator over any registered backend:
@@ -86,7 +101,8 @@ def _chaos_factory(machine: MachineProfile, *, chaos_inner: str = "jax_async",
     if chaos_inner == "chaos":
         raise ValueError("chaos backend cannot wrap itself")
     inner = make_backend(chaos_inner, machine, **options)
-    return ChaosBackend(inner, fault_spec or FaultSpec())
+    return ChaosBackend(inner, fault_spec or FaultSpec(),
+                        host=options.get("host"))
 
 
 register_backend("sim", _sim_factory)
@@ -94,3 +110,4 @@ register_backend("jax", lambda machine, **_: JaxTierBackend(machine))
 register_backend("jax_async", lambda machine, **_: AsyncJaxTierBackend(machine))
 register_backend("cpu_pool", _cpu_pool_factory)
 register_backend("chaos", _chaos_factory)
+register_backend("cross_host", _cross_host_factory)

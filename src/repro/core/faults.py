@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import zlib
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -83,6 +84,7 @@ class DegradedServe:
     slack_s: float = 0.0
     iteration: int = -1         # stamped by the session when logged
     tenant: Optional[str] = None  # owning tenant namespace, if any
+    host: Optional[str] = None    # owning cluster host, if any
 
 
 @dataclasses.dataclass
@@ -98,6 +100,7 @@ class EvictionRollback:
     channel: int = -1
     iteration: int = -1
     tenant: Optional[str] = None  # owning tenant namespace, if any
+    host: Optional[str] = None    # owning cluster host, if any
 
 
 # ---------------------------------------------------------------------------
@@ -224,7 +227,10 @@ class FaultSpec:
     All rates are per-``start_move`` probabilities drawn from one
     ``random.Random(seed)`` stream, so a fixed spec against a
     deterministic issue sequence (the virtual-time simulator) reproduces
-    the exact same fault pattern run over run.
+    the exact same fault pattern run over run.  Multi-host runs give
+    each host its own sub-stream (see :func:`host_sub_seed`): a host's
+    fault pattern depends only on its own issue sequence, never on how
+    the cluster interleaves the hosts.
     """
 
     seed: int = 0
@@ -253,6 +259,19 @@ class FaultSpec:
         return (self.transient_rate > 0 or self.stuck_rate > 0
                 or self.late_fail_rate > 0 or self.straggler_rate > 0
                 or self.straggler_channel is not None)
+
+
+def host_sub_seed(seed: int, host: Optional[str]) -> int:
+    """Deterministic per-host sub-seed for a shared cluster fault seed.
+
+    ``None`` (the single-host path) returns ``seed`` unchanged, so
+    existing chaos goldens are untouched.  Host ids hash through CRC-32
+    (stable across processes and Python versions, unlike ``hash``), so
+    two hosts sharing one :class:`FaultSpec` draw from independent
+    streams and a host's faults do not depend on scheduling order."""
+    if host is None:
+        return int(seed)
+    return int(seed) ^ zlib.crc32(str(host).encode("utf-8"))
 
 
 # ---------------------------------------------------------------------------
@@ -289,10 +308,16 @@ class ChaosBackend:
     records every injected fault as ``(kind, obj, channel)``.
     """
 
-    def __init__(self, inner: Any, spec: Optional[FaultSpec] = None):
+    def __init__(self, inner: Any, spec: Optional[FaultSpec] = None,
+                 host: Optional[str] = None):
         self.inner = inner
         self.spec = spec or FaultSpec()
-        self.rng = random.Random(self.spec.seed)
+        #: owning cluster host (None on the single-host path).  Each
+        #: host draws from its own seeded sub-stream, so a multi-host
+        #: chaos run is deterministic regardless of host scheduling
+        #: order — host A's faults never consume host B's draws.
+        self.host = host
+        self.rng = random.Random(host_sub_seed(self.spec.seed, host))
         self.fault_log: List[Tuple[str, str, int]] = []
         # open straggler windows: channel -> (start, end, factor)
         self._windows: Dict[int, Tuple[float, float, float]] = {}

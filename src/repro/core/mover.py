@@ -627,6 +627,122 @@ class ChannelSimBackend:
         return sum(c.done - c.start for c in self.copies)
 
 
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _CrossHostCopy:
+    """One in-flight shard migration over an interconnect link."""
+
+    obj: DataObject
+    dst: str                    # destination *tier* on the destination host
+    src_host: str
+    dst_host: str
+    size_bytes: int
+    start: float
+    done: float
+    channel: int                # send/recv pair index on the link
+    link_name: str
+    landed: bool = False
+
+
+class CrossHostBackend:
+    """Simulated shard-migration engine over modeled interconnect links.
+
+    Where :class:`ChannelSimBackend` models one host's DRAM<->NVM copy
+    engine, this backend models the *fabric between hosts*: each
+    directed host pair resolves to a :class:`~.perfmodel.LinkSpec`
+    through an :class:`~.perfmodel.InterconnectModel`, and each link
+    sustains ``channel_pairs`` concurrent **send/recv channel pairs** —
+    a transfer occupies one sender-side and one receiver-side endpoint
+    for its full wire time (``latency + size/bandwidth``), and transfers
+    beyond the pair budget queue on the earliest-free pair, exactly like
+    the intra-host engine's channels.
+
+    The tier flip happens only at land time (``settle``/``complete``),
+    and an optional ``on_land`` callback performs the cluster-level
+    handoff (re-homing the object from the source host's registry to the
+    destination's) — the backend itself stays pure virtual-time
+    bookkeeping so it composes with :class:`~.faults.ChaosBackend` like
+    any other registered backend.
+    """
+
+    def __init__(self, links: "InterconnectModel",
+                 now_fn: Callable[[], float],
+                 on_land: Optional[Callable[[_CrossHostCopy], None]] = None):
+        self.links = links
+        self.now_fn = now_fn
+        self.on_land = on_land
+        # (src_host, dst_host, pair) -> time the pair frees up
+        self._free_at: Dict[tuple, float] = {}
+        self.copies: List[_CrossHostCopy] = []
+
+    def start_move(self, obj: DataObject, dst: str, *,
+                   src_host: str, dst_host: str,
+                   after: Optional[_CrossHostCopy] = None) -> _CrossHostCopy:
+        """Issue one shard pull ``src_host`` -> ``dst_host`` landing in
+        tier ``dst``; picks the link's earliest-free send/recv pair."""
+        if src_host == dst_host:
+            raise ValueError(
+                f"cross-host move of {obj.name!r} needs distinct hosts, "
+                f"got {src_host!r} on both ends")
+        link = self.links.link(src_host, dst_host)
+        now = self.now_fn()
+        key_of = lambda pair: (src_host, dst_host, pair)
+        ch = min(range(link.channel_pairs),
+                 key=lambda p: self._free_at.get(key_of(p), 0.0))
+        start = max(now, self._free_at.get(key_of(ch), 0.0))
+        if after is not None:
+            start = max(start, after.done)
+        dur = link.latency + obj.size_bytes / link.bandwidth
+        copy = _CrossHostCopy(obj, dst, src_host, dst_host, obj.size_bytes,
+                              start, start + dur, ch, link.name)
+        self._free_at[key_of(ch)] = copy.done
+        self.copies.append(copy)
+        return copy
+
+    def wait(self, handle: _CrossHostCopy,
+             timeout: Optional[float] = None) -> float:
+        stall = max(0.0, handle.done - self.now_fn())
+        if timeout is not None and stall > timeout:
+            raise CopyTimeoutError(
+                f"cross-host copy of {handle.obj.name} "
+                f"({handle.src_host}->{handle.dst_host}) needs "
+                f"{stall:.4f}s > timeout {timeout:.4f}s")
+        return stall
+
+    def cancel(self, handle: _CrossHostCopy) -> bool:
+        if handle.landed:
+            return False
+        handle.landed = True
+        aborted_at = max(self.now_fn(), handle.start)
+        key = (handle.src_host, handle.dst_host, handle.channel)
+        if self._free_at.get(key, 0.0) <= handle.done:
+            self._free_at[key] = aborted_at
+        handle.done = aborted_at
+        return True
+
+    def _land(self, copy: _CrossHostCopy) -> None:
+        copy.obj.tier = copy.dst
+        copy.landed = True
+        if self.on_land is not None:
+            self.on_land(copy)
+
+    def complete(self, handle: _CrossHostCopy) -> None:
+        if not handle.landed:
+            self._land(handle)
+
+    def settle(self, now: float) -> None:
+        for c in sorted((c for c in self.copies if not c.landed),
+                        key=lambda c: c.done):
+            if c.done <= now:
+                self._land(c)
+
+    def is_done(self, handle: _CrossHostCopy) -> bool:
+        return handle.landed or handle.done <= self.now_fn()
+
+    def busy_seconds(self) -> float:
+        return sum(c.done - c.start for c in self.copies)
+
+
 def _handle_orphaned(registry: ObjectRegistry, name: str, handle: Any) -> bool:
     """True when an in-flight handle's object was retired from the
     registry — by name, or by identity when the handle carries the

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import warnings
-from typing import Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 from .profiler import ObjectPhaseProfile
 from .tiers import MachineProfile
@@ -180,6 +180,84 @@ def movement_cost(size_bytes: float, machine: MachineProfile,
 # --------------------------------------------------------------------------
 def weight(bft: float, cost: float, extra_cost: float = 0.0) -> float:
     return bft - cost - extra_cost
+
+
+# --------------------------------------------------------------------------
+# cross-host extension: per-link interconnect pricing.  Eq. (4) prices an
+# intra-host tier move against the DRAM<->NVM copy engine; a shard pulled
+# from a peer host instead crosses a modeled interconnect link with its
+# own bandwidth, per-transfer setup latency, and a bounded number of
+# concurrent send/recv channel pairs.  The coordinator compares the two
+# prices when choosing between local NVM->DRAM promotion and a peer pull.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One directed interconnect link between two hosts.
+
+    ``bandwidth`` is the sustained point-to-point rate in bytes/s (e.g.
+    ``tiers.V5E_ICI_BW`` for on-pod ICI, ~25-50x less for DCN);
+    ``latency`` the per-transfer setup cost in seconds (rendezvous +
+    first-byte); ``channel_pairs`` how many concurrent send/recv pairs
+    the link sustains at full rate (transfers beyond that queue)."""
+
+    name: str
+    bandwidth: float
+    latency: float = 0.0
+    channel_pairs: int = 1
+
+    def __post_init__(self):
+        if self.bandwidth <= 0:
+            raise ValueError(f"link {self.name!r}: bandwidth must be > 0")
+        if self.latency < 0 or self.channel_pairs < 1:
+            raise ValueError(
+                f"link {self.name!r}: latency must be >= 0 and "
+                f"channel_pairs >= 1")
+
+
+def link_transfer_time(size_bytes: float, link: LinkSpec) -> float:
+    """Wire time for one shard over one send/recv pair: setup + stream."""
+    return link.latency + size_bytes / link.bandwidth
+
+
+def cross_host_cost(size_bytes: float, link: LinkSpec,
+                    overlap_window: float = 0.0) -> float:
+    """Eq. (4) analogue for a peer-host pull: the unhidden remainder of
+    the link transfer after overlapping ``overlap_window`` seconds of
+    compute.  The setup latency overlaps too — the rendezvous happens
+    while compute runs, exactly like the copy engine's ramp."""
+    return max(link_transfer_time(size_bytes, link) - overlap_window, 0.0)
+
+
+class InterconnectModel:
+    """The cluster's link table: host-pair -> :class:`LinkSpec`.
+
+    Lookup is direction-aware with a symmetric fallback (most fabrics
+    are full-duplex and symmetric; an asymmetric pair can still be
+    registered per direction), and an optional ``default`` link prices
+    pairs the table does not name — the "flat fabric" shorthand the sim
+    uses for N virtual hosts on one switch."""
+
+    def __init__(self, links: Optional[Mapping[Tuple[str, str],
+                                               LinkSpec]] = None,
+                 default: Optional[LinkSpec] = None):
+        self._links: Dict[Tuple[str, str], LinkSpec] = dict(links or {})
+        self.default = default
+
+    def link(self, src: str, dst: str) -> LinkSpec:
+        spec = self._links.get((src, dst)) or self._links.get((dst, src))
+        if spec is None:
+            spec = self.default
+        if spec is None:
+            raise KeyError(f"no interconnect link registered for "
+                           f"{src!r} -> {dst!r} and no default")
+        return spec
+
+    def pairs(self) -> Dict[Tuple[str, str], LinkSpec]:
+        return dict(self._links)
+
+    def __repr__(self) -> str:
+        return (f"InterconnectModel({len(self._links)} links, "
+                f"default={self.default!r})")
 
 
 # --------------------------------------------------------------------------

@@ -85,6 +85,10 @@ class StageProvenance:
     chunk_generation: int
     detail: str = ""
     hist_epoch: int = 0
+    # owning cluster host ("" on the single-host path): multi-host plans
+    # carry per-host provenance so an aggregated global program records
+    # which host's pipeline produced each stage
+    host: str = ""
 
 
 def fault_provenance(n_degraded: int, n_rollbacks: int, profile_epoch: int,
@@ -137,6 +141,17 @@ class PlanProgram(PlacementPlan):
         default_factory=dict)
     tenant_admission: Dict[str, str] = dataclasses.field(
         default_factory=dict)
+    # Multi-host cluster aggregation (policy="cluster"; all empty on
+    # single-host plans): the host whose pipeline built this program
+    # (None = unclustered), per-host residency sections keyed by host id
+    # (each a JSON-safe summary of that host's solve: strategy,
+    # residents, predicted/baseline times, capacity), and the cross-host
+    # shard migrations the coordinator chose, priced over interconnect
+    # links.
+    host: Optional[str] = None
+    host_sections: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    migrations: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -205,7 +220,11 @@ class PlanProgram(PlacementPlan):
             tenant_shares=dict(self.tenant_shares),
             tenant_channels={t: list(c)
                              for t, c in self.tenant_channels.items()},
-            tenant_admission=dict(self.tenant_admission))
+            tenant_admission=dict(self.tenant_admission),
+            host=self.host,
+            host_sections={h: dict(s)
+                           for h, s in self.host_sections.items()},
+            migrations=[dict(m) for m in self.migrations])
 
     def to_json(self, **kw: Any) -> str:
         return json.dumps(self.to_dict(), **kw)
@@ -257,7 +276,11 @@ class PlanProgram(PlacementPlan):
                            d.get("tenant_shares", {}).items()},
             tenant_channels={t: [int(c) for c in chs] for t, chs in
                              d.get("tenant_channels", {}).items()},
-            tenant_admission=dict(d.get("tenant_admission", {})))
+            tenant_admission=dict(d.get("tenant_admission", {})),
+            host=d.get("host"),
+            host_sections={h: dict(s) for h, s in
+                           d.get("host_sections", {}).items()},
+            migrations=[dict(m) for m in d.get("migrations", [])])
 
     @classmethod
     def from_json(cls, s: str) -> "PlanProgram":
@@ -306,7 +329,8 @@ class PipelineState:
             stage=stage, policy=policy,
             profile_epoch=self.profiler.epoch,
             chunk_generation=self.registry.generation, detail=detail,
-            hist_epoch=getattr(self.profiler, "hist_epoch", 0)))
+            hist_epoch=getattr(self.profiler, "hist_epoch", 0),
+            host=self._cfg("host", None) or ""))
 
     def _cfg(self, name: str, default: Any) -> Any:
         return getattr(self.config, name, default)

@@ -181,6 +181,11 @@ class RuntimeConfig:
     # factor times its capacity share is demoted (its share could never
     # hold a useful fraction of any working set).  None = off.
     tenant_churn_guard: Optional[float] = None
+    # Cluster host id this session manages a shard for (None = the
+    # unclustered single-host path, bitwise identical to PR 8).  Threads
+    # host provenance through plan stage records, fault_log events and
+    # stats(), and gives the chaos backend its per-host RNG sub-stream.
+    host: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -226,12 +231,13 @@ class Session:
                 self.config.backend, machine,
                 mover=self.config.mover, channels=self.config.copy_channels,
                 priorities=self.config.copy_channel_priorities,
-                fault_spec=self.config.fault_spec)
+                fault_spec=self.config.fault_spec, host=self.config.host)
         if (self.config.fault_spec is not None
                 and not isinstance(self.backend, ChaosBackend)):
             # any backend (including one passed in) gains the configured
             # fault profile; the "chaos" factory already wrapped its inner
-            self.backend = ChaosBackend(self.backend, self.config.fault_spec)
+            self.backend = ChaosBackend(self.backend, self.config.fault_spec,
+                                        host=self.config.host)
         self.cf = cf or CalibrationConstants()
         self.capacity = (self.config.fast_capacity_bytes
                          if self.config.fast_capacity_bytes is not None
@@ -722,6 +728,8 @@ class Session:
             ev.iteration = self._iteration
             if self.tenants and getattr(ev, "tenant", None) is None:
                 ev.tenant = tenant_of(ev.obj, self.tenants)
+            if self.config.host is not None:
+                ev.host = self.config.host
             self.fault_log.append(ev)
             if isinstance(ev, DegradedServe):
                 self.n_degraded_serves += 1
@@ -835,6 +843,9 @@ class Session:
         self._cf_dirty = False
         if self.plan is None:
             return
+        if (self.config.host is not None
+                and isinstance(self.plan, policy_mod.PlanProgram)):
+            self.plan.host = self.config.host
         if ((self._degraded_since_plan or self._rollbacks_since_plan)
                 and isinstance(self.plan, policy_mod.PlanProgram)):
             # fault-bearing rebuild: stamp the provenance (an *extra*
@@ -855,7 +866,8 @@ class Session:
             self.n_admission_demotions += 1
             self.fault_log.append(DegradedServe(
                 obj=t, phase_index=-1, reason=f"admission:{why}",
-                iteration=self._iteration, tenant=t))
+                iteration=self._iteration, tenant=t,
+                host=self.config.host))
         if not recalibration:
             # a profiling-driven build opens a new plan epoch: re-arm the
             # calibration-correction budget and the best-measured memory
@@ -1169,4 +1181,6 @@ class Session:
             n_heals=self.n_heals,
             channel_health=(self.mover.health.summary()
                             if hasattr(self.mover, "health") else {}),
+            # multi-host provenance (None on the unclustered path)
+            host=self.config.host,
         )

@@ -12,6 +12,9 @@ is the shared vocabulary that threads tenancy through every layer:
   cross-tenant name collisions resolve to distinct qualified names).
 * :func:`tenant_of` — ownership attribution for any object or phase
   name, chunk-suffix aware (``"a/kv#3"`` belongs to tenant ``"a"``).
+* :func:`apportion` — the shared largest-remainder integerization
+  kernel (optionally demand-capped) behind both share functions and the
+  cluster coordinator's link-share splits.
 * :func:`capacity_shares` — work-conserving weighted water-filling of
   fast-tier bytes across tenants: each tenant's share is proportional
   to its QoS weight but capped at its demand, and capacity a sated
@@ -123,6 +126,51 @@ class TenantHandle:
 # ---------------------------------------------------------------------------
 # resource partitioning
 # ---------------------------------------------------------------------------
+def apportion(total: int, quotas: Mapping[str, float],
+              caps: Optional[Mapping[str, int]] = None) -> Dict[str, int]:
+    """Largest-remainder integerization of fractional quotas.
+
+    Floors every quota, then hands the leftover units one at a time to
+    the largest fractional remainders (ties break by name, so the result
+    is deterministic).  With ``caps`` given, no key is floored or topped
+    up past its cap and the leftover is distributed round-robin over the
+    remainder ordering until either the total is reached or every key is
+    capped — so conservation holds exactly whenever the caps admit it:
+    ``sum(out) == min(total, sum(caps))``, and without caps
+    ``sum(out) == total`` (for ``total >= 0``).
+
+    This is the one shared apportionment kernel behind
+    :func:`capacity_shares` (byte shares capped at demand),
+    :func:`channel_shares` (copy-channel counts, uncapped) and the
+    cluster coordinator's link-share splits
+    (:meth:`~repro.distributed.coordinator.ClusterCoordinator`).
+    """
+    keys = list(quotas)
+    out = {k: int(quotas[k]) for k in keys}
+    if caps is not None:
+        out = {k: min(max(0, int(caps.get(k, 0))), out[k]) for k in keys}
+    leftover = int(total) - sum(out.values())
+    by_frac = sorted(keys, key=lambda k: (-(quotas[k] - out[k]), k))
+    if caps is None:
+        for k in by_frac:
+            if leftover <= 0:
+                break
+            out[k] += 1
+            leftover -= 1
+        return out
+    i = 0
+    while leftover > 0 and by_frac:
+        k = by_frac[i % len(by_frac)]
+        if out[k] < caps.get(k, 0):
+            out[k] += 1
+            leftover -= 1
+        i += 1
+        if i > 2 * len(by_frac) and all(
+                out[k] >= caps.get(k, 0) for k in by_frac):
+            break
+    return out
+
+
 def capacity_shares(capacity_bytes: int,
                     tenants: Mapping[str, TenantSpec],
                     demand: Mapping[str, int]) -> Dict[str, int]:
@@ -156,21 +204,8 @@ def capacity_shares(capacity_bytes: int,
             break
     # integerize exactly: floor, then hand the leftover bytes to the
     # largest fractional remainders (never past a tenant's demand)
-    out = {t: min(need[t], int(shares[t])) for t in tenants}
     target = min(max(0, int(capacity_bytes)), sum(need.values()))
-    leftover = target - sum(out.values())
-    by_frac = sorted(tenants, key=lambda t: (-(shares[t] - out[t]), t))
-    i = 0
-    while leftover > 0 and by_frac:
-        t = by_frac[i % len(by_frac)]
-        if out[t] < need[t]:
-            out[t] += 1
-            leftover -= 1
-        i += 1
-        if i > 2 * len(by_frac) and all(
-                out[t] >= need[t] for t in by_frac):
-            break
-    return out
+    return apportion(target, shares, caps=need)
 
 
 def channel_shares(n_channels: int,
@@ -185,13 +220,7 @@ def channel_shares(n_channels: int,
         return {t: [] for t in tenants}
     wsum = sum(s.weight for s in tenants.values())
     quota = {t: n_channels * s.weight / wsum for t, s in tenants.items()}
-    counts = {t: int(quota[t]) for t in tenants}
-    leftover = n_channels - sum(counts.values())
-    for t in sorted(tenants, key=lambda t: (-(quota[t] - counts[t]), t)):
-        if leftover <= 0:
-            break
-        counts[t] += 1
-        leftover -= 1
+    counts = apportion(n_channels, quota)
     out: Dict[str, List[int]] = {t: [] for t in tenants}
     ch = 0
     for t in sorted(tenants, key=lambda t: (-counts[t], t)):

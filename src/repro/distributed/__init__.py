@@ -1,3 +1,5 @@
 from . import sharding
+from .coordinator import ClusterCoordinator, HostTierManager, ShardMigration
 
-__all__ = ["sharding"]
+__all__ = ["sharding", "ClusterCoordinator", "HostTierManager",
+           "ShardMigration"]

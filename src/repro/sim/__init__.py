@@ -1,5 +1,7 @@
 """Discrete-event tier simulator (Quartz-emulator analogue, paper §4)."""
 
+from .cluster import (ClusterResult, ClusterSimulation, ShardPhaseSpec,
+                      ShardedWorkload, moe_churn_multihost)
 from .engine import (PhaseExec, SimObjectAccess, SimPhaseSpec, SimSource,
                      SimWorkload, SimulationEngine, SimResult,
                      simulate_stream_time, simulate_chase_time)
@@ -24,4 +26,6 @@ __all__ = [
     "SCENARIO_WORKLOADS", "SKEWED_SCENARIO_WORKLOADS",
     "tenant_serving", "TENANT_SERVING_QOS",
     "chaos_gated_spec", "chaos_heavy_spec", "CHAOS_FAULT_PROFILES",
+    "ClusterResult", "ClusterSimulation", "ShardPhaseSpec",
+    "ShardedWorkload", "moe_churn_multihost",
 ]

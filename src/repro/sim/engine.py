@@ -236,7 +236,9 @@ class SimulationEngine:
                 # chaos rides the clock-wired sim engine: the configured
                 # fault profile is re-applied to the swapped-in backend
                 from ..core.faults import ChaosBackend
-                backend = ChaosBackend(backend, fault_spec)
+                backend = ChaosBackend(backend, fault_spec,
+                                       host=getattr(runtime.config, "host",
+                                                    None))
             self.runtime.backend = backend
             if self.runtime.mover is not None:
                 self.runtime.mover.backend = backend

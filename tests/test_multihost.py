@@ -1,0 +1,410 @@
+"""Multi-host tier management: per-host managers, cluster coordinator,
+cross-host migration backend, and the single-host fallthrough guarantee.
+
+Covers the PR's contract surface end to end:
+
+* link pricing (``LinkSpec`` / ``InterconnectModel`` /
+  ``cross_host_cost``) and the ``"cross_host"`` backend's send/recv
+  channel-pair semantics (queueing, ``after=`` chaining, land-time tier
+  flip + re-homing callback);
+* coordinator rebalance on the gated ``moe_churn_multihost`` scenario —
+  must beat host-local-only management by >= 1.10x steady time on the
+  hot host (the nightly floor, pinned here at the same threshold);
+* the promotion-vs-pull chooser picking local promotion when local spare
+  suffices;
+* one-host cluster fallthrough: bit-identical plans and virtual-time
+  traces to the unclustered PR 8 path (golden-digest pinned, both
+  movers);
+* per-host chaos RNG sub-streams: two hosts under one FaultSpec draw
+  decorrelated fault sequences, deterministically, independent of host
+  scheduling order;
+* host provenance in ``PlanProgram`` (stage records, host sections,
+  migrations) surviving serialization round-trips, and in ``stats()`` /
+  ``fault_log``.
+"""
+
+import dataclasses
+import hashlib
+import json
+
+import pytest
+
+from repro.core import (PAPER_DRAM_NVM, CrossHostBackend, FaultSpec,
+                        InterconnectModel, LinkSpec, RuntimeConfig,
+                        UnimemRuntime, calibrate, cross_host_cost,
+                        host_sub_seed, link_transfer_time, make_backend)
+from repro.core.data_objects import DataObject
+from repro.core.policy import PlanProgram, StageProvenance
+from repro.distributed import ClusterCoordinator, HostTierManager
+from repro.sim import (ClusterSimulation, ShardPhaseSpec, ShardedWorkload,
+                       SimObjectAccess, SimulationEngine, kv_serving,
+                       moe_churn_multihost)
+
+MB = 1024 ** 2
+MACHINE = PAPER_DRAM_NVM
+CF = calibrate(MACHINE)
+
+
+# ---------------------------------------------------------------------------
+# link model
+# ---------------------------------------------------------------------------
+def test_link_spec_validates():
+    with pytest.raises(ValueError):
+        LinkSpec("l", bandwidth=0.0)
+    with pytest.raises(ValueError):
+        LinkSpec("l", bandwidth=1e9, latency=-1.0)
+    with pytest.raises(ValueError):
+        LinkSpec("l", bandwidth=1e9, channel_pairs=0)
+
+
+def test_link_transfer_and_cost():
+    link = LinkSpec("icl", bandwidth=2e9, latency=1e-3)
+    assert link_transfer_time(2e9, link) == pytest.approx(1.0 + 1e-3)
+    assert cross_host_cost(2e9, link, overlap_window=0.5) \
+        == pytest.approx(0.501)
+    # fully hidden behind the overlap window
+    assert cross_host_cost(1e6, link, overlap_window=10.0) == 0.0
+
+
+def test_interconnect_lookup_direction_and_default():
+    fast = LinkSpec("fast", bandwidth=8e9)
+    dflt = LinkSpec("slow", bandwidth=1e9)
+    m = InterconnectModel({("h0", "h1"): fast}, default=dflt)
+    assert m.link("h0", "h1") is fast
+    assert m.link("h1", "h0") is fast          # symmetric fallback
+    assert m.link("h0", "h2") is dflt
+    with pytest.raises(KeyError):
+        InterconnectModel({("h0", "h1"): fast}).link("h0", "h2")
+
+
+# ---------------------------------------------------------------------------
+# cross_host backend: send/recv pair semantics
+# ---------------------------------------------------------------------------
+def _xhost_backend(pairs=2, bw=1e9, lat=0.0, now=0.0, on_land=None):
+    clock = [now]
+    links = InterconnectModel(
+        default=LinkSpec("icl", bandwidth=bw, latency=lat,
+                         channel_pairs=pairs))
+    b = make_backend("cross_host", MACHINE, links=links,
+                     now_fn=lambda: clock[0], on_land=on_land)
+    assert isinstance(b, CrossHostBackend)
+    return b, clock
+
+
+def test_cross_host_pairs_queue_beyond_budget():
+    b, _ = _xhost_backend(pairs=2, bw=1e9)
+    objs = [DataObject(f"o{i}", int(1e9)) for i in range(3)]
+    h = [b.start_move(o, "fast", src_host="h0", dst_host="h1")
+         for o in objs]
+    # two pairs run concurrently; the third queues on the earliest-free
+    assert h[0].start == 0.0 and h[1].start == 0.0
+    assert h[2].start == pytest.approx(1.0)
+    assert h[2].done == pytest.approx(2.0)
+    assert b.busy_seconds() == pytest.approx(3.0)
+
+
+def test_cross_host_after_chains_and_settle_flips_tier():
+    landed = []
+    b, clock = _xhost_backend(pairs=4, bw=1e9, on_land=landed.append)
+    a = b.start_move(DataObject("a", int(1e9)), "fast",
+                     src_host="h0", dst_host="h1")
+    c = b.start_move(DataObject("c", int(1e9)), "fast",
+                     src_host="h0", dst_host="h1", after=a)
+    assert c.start == pytest.approx(a.done)
+    clock[0] = 1.5
+    b.settle(clock[0])
+    assert a.landed and a.obj.tier == "fast"
+    assert not c.landed and c.obj.tier == "slow"
+    assert [cp.obj.name for cp in landed] == ["a"]
+    b.settle(10.0)
+    assert c.landed and len(landed) == 2
+
+
+def test_cross_host_rejects_same_host():
+    b, _ = _xhost_backend()
+    with pytest.raises(ValueError):
+        b.start_move(DataObject("x", 1), "fast",
+                     src_host="h0", dst_host="h0")
+
+
+def test_cross_host_links_per_pair_are_independent():
+    b, _ = _xhost_backend(pairs=1, bw=1e9)
+    x = b.start_move(DataObject("x", int(1e9)), "fast",
+                     src_host="h0", dst_host="h1")
+    y = b.start_move(DataObject("y", int(1e9)), "fast",
+                     src_host="h0", dst_host="h2")
+    z = b.start_move(DataObject("z", int(1e9)), "fast",
+                     src_host="h0", dst_host="h1")
+    # distinct host pairs don't contend; the same pair queues
+    assert x.start == 0.0 and y.start == 0.0
+    assert z.start == pytest.approx(x.done)
+
+
+# ---------------------------------------------------------------------------
+# gated scenario: coordinator rebalance must beat host-local-only
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def churn_runs():
+    machine, wl, links, knobs = moe_churn_multihost()
+    sim = ClusterSimulation(machine, wl, links=links, **knobs)
+    return wl, sim.run_local_only(12), sim.run_coordinated(12)
+
+
+def test_moe_churn_multihost_coordinator_beats_local(churn_runs):
+    _, local, coord = churn_runs
+    hot_gain = local.steady_time("h0") / coord.steady_time("h0")
+    assert hot_gain >= 1.10          # the nightly regression floor
+    assert local.cluster_steady_time / coord.cluster_steady_time >= 1.10
+
+
+def test_moe_churn_migrations_pull_from_hot_host(churn_runs):
+    wl, _, coord = churn_runs
+    assert coord.migrations, "rebalance found nothing to move"
+    for mig in coord.migrations:
+        assert mig.mode == "cross_host"
+        assert mig.src_host == "h0" and mig.dst_host != "h0"
+        assert mig.obj not in wl.shared      # replicas never re-home
+        assert mig.est_cost_s > 0.0 and mig.est_benefit_s > 0.0
+        assert coord.assignment[mig.obj] == mig.dst_host
+    assert coord.migration_s > 0.0
+    # pulls spread across distinct peers (the apportioned link shares)
+    assert len({m.dst_host for m in coord.migrations}) \
+        == len(coord.migrations)
+
+
+def test_moe_churn_global_program_aggregates_hosts(churn_runs):
+    wl, _, coord = churn_runs
+    prog = coord.program
+    assert prog.strategy == "cluster" and prog.policy == "cluster"
+    assert sorted(prog.host_sections) == wl.hosts()
+    for h, sec in prog.host_sections.items():
+        assert sec["capacity_bytes"] > 0
+        assert sec["n_objects"] > 0
+    # cluster time = slowest host, not the sum
+    assert prog.predicted_iteration_time == pytest.approx(max(
+        sec["predicted_iteration_time"]
+        for sec in prog.host_sections.values()))
+    hosts_seen = {p.host for p in prog.provenance}
+    assert hosts_seen == set(wl.hosts())
+    assert [m["obj"] for m in prog.migrations] \
+        == [m.obj for m in coord.migrations]
+    # and the whole thing serializes
+    rt = PlanProgram.from_dict(json.loads(prog.to_json()))
+    assert rt.host_sections == prog.host_sections
+    assert rt.migrations == prog.migrations
+
+
+def test_coordinator_prefers_local_promotion_when_spare_suffices():
+    # one oversubscribed host with plenty of local spare for its surplus
+    # shard: the chooser must keep it home (movement_cost beats the link)
+    machine, wl, links, knobs = moe_churn_multihost(experts_per_host=2)
+    knobs = dict(knobs, fast_capacity_bytes=200 * MB)
+    sim = ClusterSimulation(machine, wl, links=links, **knobs)
+    coord, engines = sim._build(wl.assignment)
+    sim.run_hosts(engines, 4)
+    migs = sim_migs = coord.plan_rebalance()
+    assert all(m.mode == "local_promote" for m in migs)
+    assert all(m.src_host == m.dst_host == "h0" for m in sim_migs)
+
+
+def test_one_host_cluster_plans_no_migrations():
+    machine, wl, links, knobs = moe_churn_multihost(n_hosts=1)
+    sim = ClusterSimulation(machine, wl, links=links, **knobs)
+    coord, engines = sim._build(wl.assignment)
+    sim.run_hosts(engines, 4)
+    assert coord.plan_rebalance() == []
+
+
+# ---------------------------------------------------------------------------
+# single-host fallthrough: bit-identical to the unclustered PR 8 path
+# ---------------------------------------------------------------------------
+# Golden digests of the unclustered kv_serving run (256 MB, 8 iters) per
+# mover — (plan digest, steady time, trace digest).  The one-host cluster
+# must reproduce them bit-for-bit; so must the plain path (these pin the
+# PR 8 pipeline itself against accidental drift from the host plumbing).
+ONE_HOST_GOLDEN = {
+    "slack": ("62b4841234212db2", 1.0603286323200083, "200ad44ae9375c36"),
+    "fifo": ("62b4841234212db2", 1.2390059827200217, "ffeaba43a494eefd"),
+}
+
+
+def _plan_digest(plan):
+    d = dict(strategy=plan.strategy,
+             residents=[sorted(r) for r in plan.residents],
+             moves=[(m.obj, m.dst, m.trigger_phase, m.needed_by,
+                     m.size_bytes, m.est_unhidden_cost, m.est_benefit)
+                    for m in plan.moves],
+             predicted=plan.predicted_iteration_time,
+             baseline=plan.baseline_iteration_time,
+             schedule=[(s.op.obj, s.window_s, s.duration_s, s.slack_s)
+                       for s in plan.schedule])
+    return hashlib.sha256(json.dumps(d, sort_keys=True).encode()) \
+        .hexdigest()[:16]
+
+
+def _trace_digest(trace):
+    d = [(p.iteration, p.phase_index, p.start, p.stall_s, p.duration_s)
+         for p in trace]
+    return hashlib.sha256(json.dumps(d).encode()).hexdigest()[:16]
+
+
+def _as_sharded(wl, host="h0"):
+    return ShardedWorkload(
+        wl.name,
+        [ShardPhaseSpec(p.name, p.compute_s, p.touches) for p in wl.phases],
+        dict(wl.objects), shared={},
+        assignment={o: host for o in wl.objects},
+        chunkable=dict(wl.chunkable))
+
+
+def _run_plain(wl, mover, iters=8, cap=256 * MB):
+    rt = UnimemRuntime(MACHINE, RuntimeConfig(fast_capacity_bytes=cap,
+                                              mover=mover), cf=CF)
+    statics = wl.static_ref_counts()
+    for n, s in wl.objects.items():
+        rt.register(n, s, chunkable=wl.chunkable.get(n, False),
+                    static_refs=statics.get(n))
+    res = SimulationEngine(MACHINE, wl, runtime=rt).run(iters)
+    return res, rt
+
+
+@pytest.mark.parametrize("mover", ["slack", "fifo"])
+def test_one_host_cluster_is_bit_identical_to_unclustered(mover):
+    wl = kv_serving()
+    res, rt = _run_plain(wl, mover)
+    plain = (_plan_digest(rt.plan), res.steady_iteration_time,
+             _trace_digest(res.phase_trace))
+    assert plain == ONE_HOST_GOLDEN[mover]
+
+    sim = ClusterSimulation(MACHINE, _as_sharded(wl), cf=CF,
+                            fast_capacity_bytes=256 * MB, mover=mover)
+    cres = sim.run_local_only(8)
+    coord, engines = sim._build(sim.workload.assignment)
+    cres2 = sim.run_hosts(engines, 8)["h0"]
+    cluster = (_plan_digest(engines["h0"].runtime.plan),
+               cres.steady_time("h0"), _trace_digest(cres2.phase_trace))
+    assert cluster == plain
+    assert cres2.iteration_times == cres.host_results["h0"].iteration_times
+    # the host tag rides along without perturbing the plan
+    assert engines["h0"].runtime.plan.host == "h0"
+    prog = coord.aggregate_program()
+    assert list(prog.host_sections) == ["h0"]
+    assert prog.predicted_iteration_time == pytest.approx(
+        engines["h0"].runtime.plan.predicted_iteration_time)
+
+
+# ---------------------------------------------------------------------------
+# per-host chaos RNG sub-streams
+# ---------------------------------------------------------------------------
+def test_host_sub_seed_is_stable_and_decorrelated():
+    assert host_sub_seed(42, None) == 42        # PR 8 path untouched
+    assert host_sub_seed(42, "h0") == host_sub_seed(42, "h0")
+    assert host_sub_seed(42, "h0") != host_sub_seed(42, "h1")
+    assert host_sub_seed(42, "h0") != 42
+
+
+def _symmetric_churn_cluster(fault_spec):
+    """Two hosts with *identical* local workloads (rotating hot expert
+    pair over capacity), so only the chaos sub-seed can distinguish
+    their fault sequences."""
+    ex, passes = 40 * MB, 2.0
+    objects, assignment, phases = {}, {}, []
+    for h in ("h0", "h1"):
+        for k in range(3):
+            objects[f"{h}/e{k}"] = ex
+            assignment[f"{h}/e{k}"] = h
+    for p in range(2):
+        touches = {}
+        for h in ("h0", "h1"):
+            touches[f"{h}/e{p}"] = SimObjectAccess(passes * ex / 64, 0.9)
+            touches[f"{h}/e{p + 1}"] = SimObjectAccess(passes * ex / 64, 0.9)
+        phases.append(ShardPhaseSpec(f"p{p}", 0.002, touches))
+    wl = ShardedWorkload("sym_churn", phases, objects, {}, assignment)
+    return ClusterSimulation(MACHINE, wl, fast_capacity_bytes=80 * MB,
+                             fault_spec=fault_spec)
+
+
+def _fault_patterns(engines):
+    """Per-host fault sequences with object names elided (the two hosts'
+    objects are name-prefixed; the *pattern* is what sub-seeding
+    decorrelates)."""
+    return {h: [(kind, ch) for kind, _obj, ch in
+                engines[h].runtime.backend.fault_log]
+            for h in engines}
+
+
+def test_two_host_chaos_is_deterministic_and_decorrelated():
+    spec = FaultSpec(seed=7, transient_rate=0.3)
+    runs = []
+    for _ in range(2):
+        sim = _symmetric_churn_cluster(spec)
+        _, engines = sim._build(sim.workload.assignment)
+        results = sim.run_hosts(engines, 8)
+        runs.append(({h: r.iteration_times for h, r in results.items()},
+                     _fault_patterns(engines)))
+    # determinism: bit-identical across repeat runs
+    assert runs[0] == runs[1]
+    times, patterns = runs[0]
+    # decorrelation: identical workloads, same spec — different streams
+    assert patterns["h0"] != patterns["h1"]
+    assert patterns["h0"] and patterns["h1"]
+
+
+def test_two_host_chaos_is_scheduling_order_independent():
+    spec = FaultSpec(seed=7, transient_rate=0.3)
+    seq = _symmetric_churn_cluster(spec).run_local_only(8)
+    inter = _symmetric_churn_cluster(spec).run_local_only(8, interleave=True)
+    for h in ("h0", "h1"):
+        assert seq.host_results[h].iteration_times \
+            == inter.host_results[h].iteration_times
+        assert seq.host_results[h].phase_trace \
+            == inter.host_results[h].phase_trace
+
+
+def test_fault_events_carry_host_provenance():
+    spec = FaultSpec(seed=3, late_fail_rate=0.9)
+    sim = _symmetric_churn_cluster(spec)
+    _, engines = sim._build(sim.workload.assignment)
+    sim.run_hosts(engines, 6)
+    for h, eng in engines.items():
+        assert eng.runtime.stats()["host"] == h
+        for ev in eng.runtime.fault_log:
+            assert ev.host == h
+
+
+# ---------------------------------------------------------------------------
+# provenance plumbing
+# ---------------------------------------------------------------------------
+def test_stage_provenance_host_roundtrip_and_backcompat():
+    p = StageProvenance(stage="attribute", policy="unimem",
+                        profile_epoch=1, chunk_generation=2, host="h3")
+    d = dataclasses.asdict(p)
+    assert StageProvenance(**d) == p
+    legacy = {k: v for k, v in d.items() if k != "host"}
+    assert StageProvenance(**legacy).host == ""   # pre-PR 9 dicts load
+
+
+def test_plan_program_host_fields_default_empty_on_legacy_json():
+    prog = PlanProgram(strategy="global", residents=[], moves=[],
+                       predicted_iteration_time=1.0,
+                       baseline_iteration_time=2.0)
+    d = prog.to_dict()
+    for key in ("host", "host_sections", "migrations"):
+        d.pop(key)
+    back = PlanProgram.from_dict(d)
+    assert back.host is None
+    assert back.host_sections == {} and back.migrations == []
+
+
+def test_host_tier_manager_rejects_mistagged_session():
+    rt = UnimemRuntime(MACHINE, RuntimeConfig(host="h1"), cf=CF)
+    with pytest.raises(ValueError):
+        HostTierManager("h0", MACHINE, session=rt)
+
+
+def test_cluster_rejects_duplicate_hosts():
+    mk = lambda h: HostTierManager(h, MACHINE)
+    with pytest.raises(ValueError):
+        ClusterCoordinator([mk("h0"), mk("h0")])
+    with pytest.raises(ValueError):
+        ClusterCoordinator([])

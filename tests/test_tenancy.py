@@ -18,8 +18,14 @@ import random
 import pytest
 
 from repro.core import (PAPER_DRAM_NVM, FaultLog, FaultSpec, RuntimeConfig,
-                        TenantSpec, UnimemRuntime, calibrate,
+                        TenantSpec, UnimemRuntime, apportion, calibrate,
                         capacity_shares, channel_shares, tenant_of)
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                 # seeded fallback shim
+    from _propcheck import st, given, settings
 from repro.core.data_objects import ObjectRegistry
 from repro.core.faults import DegradedServe
 from repro.core.mover import ChannelSimBackend
@@ -190,6 +196,29 @@ def test_channel_shares_partition_exactly():
         out = channel_shares(n_ch, tenants)
         flat = sorted(c for chs in out.values() for c in chs)
         assert flat == list(range(n_ch))
+
+
+@settings(max_examples=80, deadline=None)
+@given(total=st.integers(0, 500),
+       weights=st.lists(st.floats(0.0, 50.0), min_size=1, max_size=8),
+       caps=st.lists(st.integers(0, 120), min_size=8, max_size=8))
+def test_apportion_conserves_total(total, weights, caps):
+    """The shared largest-remainder helper's conservation law: integer
+    allotments sum exactly to the total (capped: to min(total, sum of
+    caps)), each within one unit of its real-valued quota and never
+    above its cap — for capacity splits, channel counts and the
+    coordinator's link-pair shares alike."""
+    wsum = sum(weights) or 1.0
+    quotas = {f"k{i}": total * w / wsum for i, w in enumerate(weights)}
+    out = apportion(total, quotas)
+    assert sum(out.values()) == total
+    for k, q in quotas.items():
+        assert int(q) <= out[k] <= int(q) + 1
+    capped = {f"k{i}": c for i, c in zip(range(len(weights)), caps)}
+    out = apportion(total, quotas, caps=capped)
+    assert sum(out.values()) == min(total, sum(capped.values()))
+    for k in quotas:
+        assert 0 <= out[k] <= capped[k]
 
 
 def test_admission_control_cold_and_churn():
