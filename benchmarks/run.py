@@ -597,79 +597,118 @@ def bench_planner() -> None:
         resplit_refs(graph, reg)    # parent refs -> size-fraction chunk refs
         return reg, graph, prof, refs, times
 
+    def timed(fn, repeats):
+        """Run ``fn`` ``repeats`` times; return (last result, best µs,
+        median µs).  Best-of-k is what the gates compare (least noisy);
+        the median rides along so a single lucky run is visible."""
+        ts, out = [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return out, ts[0] * 1e6, ts[len(ts) // 2] * 1e6
+
     for n in (100, 500, 2000):
         reg, graph, prof, _, _ = build(n)
-        plans, lat = {}, {}
+        plans, best, med = {}, {}, {}
         for mode, vec in (("vectorized", True), ("legacy", False)):
-            planner = Planner(mach, reg, CalibrationConstants(),
-                              DEFAULT_DRAM, vectorized=vec)
-            best = float("inf")
-            for _ in range(3 if n <= 500 else 2):
-                t0 = time.perf_counter()
-                plans[mode] = planner.plan(graph, prof)
-                best = min(best, time.perf_counter() - t0)
-            lat[mode] = best * 1e6
+            def cold_plan(vec=vec):
+                # fresh planner per repeat: this row times the *cold*
+                # build (cross-tick caches are the replan rows' job)
+                return Planner(mach, reg, CalibrationConstants(),
+                               DEFAULT_DRAM, vectorized=vec).plan(graph, prof)
+            plans[mode], best[mode], med[mode] = timed(
+                cold_plan, 3 if n <= 500 else 2)
         equal = (plans["vectorized"].moves == plans["legacy"].moves
                  and plans["vectorized"].predicted_iteration_time
                  == plans["legacy"].predicted_iteration_time)
         if not equal:   # the oracle guarantee must hold at benchmark scale
             raise RuntimeError(
                 f"vectorized plan diverged from the scalar oracle at n={n}")
-        emit(f"planner_n{n}", lat["vectorized"],
-             f"legacy_us={lat['legacy']:.0f};"
-             f"vectorized_us={lat['vectorized']:.0f};"
-             f"speedup={lat['legacy'] / lat['vectorized']:.1f};"
-             f"plans_equal={equal}")
+        emit(f"planner_n{n}", best["vectorized"],
+             f"legacy_us={best['legacy']:.0f};"
+             f"vectorized_us={best['vectorized']:.0f};"
+             f"median_us={med['vectorized']:.0f};"
+             f"speedup={best['legacy'] / best['vectorized']:.1f};"
+             f"seed=0;plans_equal={equal}")
 
-    # ---- scoped replan vs full replan at 2k chunks, single-phase drift ----
+    # vectorized-only cold build at 20k chunks (the scalar path takes
+    # minutes at this scale, so no legacy comparison / speedup key)
+    n = 20000
+    reg, graph, prof, _, _ = build(n)
+    plan20k, b, m = timed(lambda: Planner(
+        mach, reg, CalibrationConstants(), DEFAULT_DRAM).plan(graph, prof), 2)
+    emit(f"planner_n{n}", b,
+         f"vectorized_us={b:.0f};median_us={m:.0f};seed=0;"
+         f"legacy=skipped_at_scale;strategy={plan20k.strategy}")
+
+    # ---- scoped replan vs full rebuild, single-phase intensity drift ----
     # The fixture mirrors a layered training loop (32 phases — modest next
     # to lm_train_workload's 72 at 96 layers / 4 per group).  The drift is
     # a single phase's access *intensity* shifting (same reference set,
     # counts scaled, time held) — the localized-drift case the scoped
     # response targets.  The scoped replan must (a) produce exactly the
-    # full replan's plan and (b) be >=5x faster (nightly floor).
-    n, n_phases = 2000, 32
-    reg, graph, prof, refs, times = build(n, n_phases=n_phases)
-    rng = random.Random(1)
-    planner = Planner(mach, reg, CalibrationConstants(), DEFAULT_DRAM)
-    local = planner.plan_local(graph, prof)
-    glob = planner.plan_global(graph, prof)
-    drift = n_phases - 1
-    prof.decay(0.25, phases=[drift])
-    drifted_refs = {k: v * rng.uniform(0.5, 2.0)
-                    for k, v in refs[drift].items()}
-    prof.observe(PhaseTraceEvent(drift, times[drift], drifted_refs))
-    prof.annotate_graph(graph)
-    resplit_refs(graph, reg)
+    # plan a from-scratch rebuild produces and (b) stay far under the
+    # serving-tick budget (nightly: scoped_us ceiling at 20k chunks,
+    # scoped_speedup floor at 2k, greuse_frac floor at 20k).
+    def replan_row(n, full_repeats, scoped_repeats, n_phases=32):
+        reg, graph, prof, refs, times_ = build(n, n_phases=n_phases)
+        rng = random.Random(1)
+        planner = Planner(mach, reg, CalibrationConstants(), DEFAULT_DRAM)
+        local = planner.plan_local(graph, prof)
+        glob = planner.plan_global(graph, prof)
+        drift = n_phases - 1
+        prof.decay(0.25, phases=[drift])
+        drifted_refs = {k: v * rng.uniform(0.5, 2.0)
+                        for k, v in refs[drift].items()}
+        prof.observe(PhaseTraceEvent(drift, times_[drift], drifted_refs))
+        prof.annotate_graph(graph)
+        resplit_refs(graph, reg)
 
-    best_full = best_scoped = float("inf")
-    for _ in range(3):
-        t0 = time.perf_counter()
-        full = planner.plan(graph, prof)
-        best_full = min(best_full, time.perf_counter() - t0)
-    for _ in range(3):
-        t0 = time.perf_counter()
-        scoped = planner.plan(graph, prof,
-                              standing=local.phase_decisions,
-                              standing_global=glob.global_contribs,
-                              standing_digest=local.graph_digest)
-        best_scoped = min(best_scoped, time.perf_counter() - t0)
-    equal = (full.moves == scoped.moves
-             and full.residents == scoped.residents
-             and full.predicted_iteration_time
-             == scoped.predicted_iteration_time
-             and full.strategy == scoped.strategy)
-    if not equal:
-        raise RuntimeError("scoped replan diverged from the full replan")
-    sl = planner.plan_local(graph, prof, standing=local.phase_decisions,
-                            standing_digest=local.graph_digest)
-    reused = sum(1 for d in sl.phase_decisions if d.reused)
-    emit(f"planner_replan_n{n}", best_scoped * 1e6,
-         f"full_us={best_full * 1e6:.0f};"
-         f"scoped_us={best_scoped * 1e6:.0f};"
-         f"scoped_speedup={best_full / best_scoped:.1f};"
-         f"reused={reused}/{n_phases};"
-         f"plans_equal={equal}")
+        def full_rebuild():
+            # fresh planner: the cost of replanning with no standing
+            # state at all (cold caches, every phase solved)
+            return Planner(mach, reg, CalibrationConstants(),
+                           DEFAULT_DRAM).plan(graph, prof)
+
+        def scoped_replan():
+            # production ticks each see *new* drift, so drop the
+            # whole-decision memo between repeats: every repeat pays
+            # the row-reuse + drifted-phase solve path, never a
+            # memoized whole-plan lookup
+            planner._global_memo = None
+            return planner.plan(graph, prof,
+                                standing=local.phase_decisions,
+                                standing_global=glob.global_contribs,
+                                standing_digest=local.graph_digest)
+
+        full, best_full, _ = timed(full_rebuild, full_repeats)
+        scoped, best_scoped, med_scoped = timed(scoped_replan, scoped_repeats)
+        equal = (full.moves == scoped.moves
+                 and full.residents == scoped.residents
+                 and full.predicted_iteration_time
+                 == scoped.predicted_iteration_time
+                 and full.strategy == scoped.strategy)
+        if not equal:   # scoped replans are bit-identical, or the run dies
+            raise RuntimeError(
+                f"scoped replan diverged from the full rebuild at n={n}")
+        sl = planner.plan_local(graph, prof, standing=local.phase_decisions,
+                                standing_digest=local.graph_digest)
+        reused = sum(1 for d in sl.phase_decisions if d.reused)
+        emit(f"planner_replan_n{n}", best_scoped,
+             f"full_us={best_full:.0f};"
+             f"scoped_us={best_scoped:.0f};"
+             f"median_scoped_us={med_scoped:.0f};"
+             f"scoped_speedup={best_full / best_scoped:.1f};"
+             f"reused={reused}/{n_phases};"
+             f"greuse_frac={scoped.global_rows_reused / n_phases:.3f};"
+             f"global_mode={scoped.global_mode};"
+             f"seed=0;plans_equal={equal}")
+
+    replan_row(2000, full_repeats=3, scoped_repeats=5)
+    replan_row(20000, full_repeats=2, scoped_repeats=5)
+    replan_row(100000, full_repeats=1, scoped_repeats=3)    # smoke scale
     write_rows("planner_latency.csv", "planner_")
 
 

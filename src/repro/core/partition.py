@@ -314,7 +314,8 @@ def partition_object(registry: ObjectRegistry, name: str,
 # reference attribution
 # ---------------------------------------------------------------------------
 def resplit_refs(graph: PhaseGraph, registry: ObjectRegistry,
-                 profiler: Optional[PhaseProfiler] = None) -> None:
+                 profiler: Optional[PhaseProfiler] = None,
+                 phases: Optional[Sequence[int]] = None) -> None:
     """Re-attribute every partitioned parent's per-phase reference counts to
     its chunks, using the profiler's measured histograms when available
     (falling back to size fractions).
@@ -322,7 +323,14 @@ def resplit_refs(graph: PhaseGraph, registry: ObjectRegistry,
     Safe to call on every (re)plan: ``annotate_graph`` re-writes parent-name
     reference counts from the (parent-keyed) profiles, and this pass splits
     them back down to chunk granularity with the freshest attribution.
+
+    ``phases`` scopes the re-attribution to the listed phase indices (the
+    serving-tick replan path: an undrifted phase was skipped by the scoped
+    ``annotate_graph`` too, so its refs still hold the previous build's
+    chunk attribution — recomputing it from the same profile version would
+    write identical values).
     """
+    scope = None if phases is None else set(phases)
     parents = sorted({o.parent for o in registry if o.parent is not None})
     for parent in parents:
         spans = chunk_spans(registry, parent)
@@ -330,6 +338,8 @@ def resplit_refs(graph: PhaseGraph, registry: ObjectRegistry,
             continue
         total_bytes = sum(c.size_bytes for c, _, _ in spans) or 1
         for ph in graph:
+            if scope is not None and ph.index not in scope:
+                continue
             if parent not in ph.refs:
                 # A parent that was profiled but faded below annotate_graph's
                 # one-access floor has no ref key anymore — its chunks are
@@ -395,16 +405,19 @@ def coalesce_chunks(registry: ObjectRegistry, graph: PhaseGraph,
     out: Dict[str, Tuple[int, int]] = {}
     parents = sorted({o.parent for o in registry if o.parent is not None})
     for parent in parents:
+        # histogram check first: it is O(profiled phases) while chunk_spans
+        # scans the whole registry, and most parents have no measured
+        # densities on any given tick
+        phase_bins = (profiler.object_bins(parent)
+                      if profiler is not None else {})
+        if not phase_bins:
+            continue        # no measured densities: nothing to judge by
         spans = chunk_spans(registry, parent)
         if len(spans) < 2:
             continue
         if any(c.payload is not None for c, _, _ in spans):
             continue        # physical slices: re-joining would copy
         total = spans[-1][2] or 1
-        phase_bins = (profiler.object_bins(parent)
-                      if profiler is not None else {})
-        if not phase_bins:
-            continue        # no measured densities: nothing to judge by
         # per-phase per-byte density of each chunk (mass / byte fraction;
         # the parent's uniform density is 1.0 on this scale)
         dens = {phi: [bin_mass(bins, lo / total, hi / total)

@@ -175,6 +175,17 @@ def movement_cost(size_bytes: float, machine: MachineProfile,
     return max(size_bytes / machine.copy_bw - overlap_window, 0.0)
 
 
+def movement_cost_batch(size_bytes, machine: MachineProfile,
+                        overlap_windows) -> np.ndarray:
+    """Elementwise :func:`movement_cost` over aligned arrays — the same
+    IEEE float64 expression (divide, subtract, clamp), so each element is
+    bitwise equal to the scalar call."""
+    import numpy as np
+    return np.maximum(
+        np.asarray(size_bytes, dtype=np.float64) / machine.copy_bw
+        - np.asarray(overlap_windows, dtype=np.float64), 0.0)
+
+
 # --------------------------------------------------------------------------
 # Eq. (5): w = BFT - COST - extra_COST
 # --------------------------------------------------------------------------

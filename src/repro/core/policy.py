@@ -202,11 +202,14 @@ class PlanProgram(PlacementPlan):
                 moves=[dataclasses.asdict(m) for m in d.moves],
                 exit_residents=sorted(d.exit_residents),
                 exit_bytes=d.exit_bytes,
-                benefits=d.benefits) for d in self.phase_decisions],
+                benefits=d.benefits,
+                classes=d.classes) for d in self.phase_decisions],
             global_contribs=[dict(
                 phase_index=g.phase_index, version=list(g.version),
                 generation=g.generation, objs=list(g.objs),
-                row=[float(v) for v in g.row])
+                row=[float(v) for v in g.row],
+                cls_row=([int(v) for v in g.cls_row]
+                         if g.cls_row is not None else None))
                 for g in self.global_contribs],
             graph_digest=self.graph_digest,   # nested tuples -> JSON lists
             phase_baseline=list(self.phase_baseline),
@@ -247,11 +250,14 @@ class PlanProgram(PlacementPlan):
             moves=tuple(MoveOp(**m) for m in pd["moves"]),
             exit_residents=frozenset(pd["exit_residents"]),
             exit_bytes=pd["exit_bytes"],
-            benefits=pd.get("benefits")) for pd in d["phase_decisions"]]
+            benefits=pd.get("benefits"),
+            classes=pd.get("classes")) for pd in d["phase_decisions"]]
         contribs = [GlobalContrib(
             phase_index=g["phase_index"], version=tuple(g["version"]),
             generation=g["generation"], objs=tuple(g["objs"]),
-            row=np.asarray(g["row"], dtype=np.float64))
+            row=np.asarray(g["row"], dtype=np.float64),
+            cls_row=(np.asarray(g["cls_row"], dtype=np.uint8)
+                     if g.get("cls_row") is not None else None))
             for g in d.get("global_contribs", [])]
         digest = d.get("graph_digest")
         return cls(
@@ -323,6 +329,13 @@ class PipelineState:
     # the partition the bandwidth_partition solve produced
     tenants: Optional[Dict[str, TenantSpec]] = None
     tenant_solution: Optional[Dict[str, Any]] = None
+    # Phases the drift monitor identified as drifted this replan (None =
+    # unscoped build).  The attribute/partition stages restrict their
+    # rewrites to these phases when it is provably safe to do so (see
+    # stage_attribute) — an undrifted phase's profile version and the
+    # registry generation pin its attribution, so re-running it would
+    # write identical values.
+    drift_scope: Optional[Sequence[int]] = None
 
     def record(self, policy: str, stage: str, detail: str = "") -> None:
         self.provenance.append(StageProvenance(
@@ -339,12 +352,38 @@ class PipelineState:
 # ---------------------------------------------------------------------------
 # stages
 # ---------------------------------------------------------------------------
+def _gated_drift_scope(state: PipelineState) -> Optional[List[int]]:
+    """The drift scope, or None when scoped attribution is not provably
+    safe: it requires a standing program from the same lineage (so every
+    phase was attributed by a previous build), an unchanged registry
+    generation (chunk spans pin the attribution), and single-resolution
+    histograms (multi-res re-splitting re-attributes outside the scope)."""
+    scope = state.drift_scope
+    if scope is None:
+        return None
+    if (state.standing is None
+            or not state._cfg("scoped_replan", True)
+            or state.standing.chunk_generation != state.registry.generation
+            or state._cfg("histogram_refine", False)):
+        return None
+    return sorted(scope)
+
+
 def stage_attribute(state: PipelineState, policy: str = "unimem") -> None:
     """Write measured phase times and per-object access counts into the
-    phase graph (objects faded below one access are de-referenced)."""
-    state.profiler.annotate_graph(state.graph)
+    phase graph (objects faded below one access are de-referenced).
+
+    During a scoped drift response only the drifted phases are rewritten:
+    the session's re-profiling froze every other phase's profile state
+    (bitwise), so their graph annotations from the previous build are
+    already what a full pass would write."""
+    scope = _gated_drift_scope(state)
+    state.drift_scope = scope       # partition stage reuses the gated value
+    state.profiler.annotate_graph(state.graph, phases=scope)
     state.record(policy, "attribute",
-                 f"{len(state.graph)} phases annotated")
+                 f"{len(state.graph)} phases annotated" if scope is None
+                 else f"{len(scope)}/{len(state.graph)} phases annotated"
+                      " (scoped)")
 
 
 def stage_partition(state: PipelineState, policy: str = "unimem") -> None:
@@ -369,9 +408,12 @@ def stage_partition(state: PipelineState, policy: str = "unimem") -> None:
         # parent-keyed profiles, so re-attribute them to chunks with the
         # freshest histograms.  (auto_partition already did this for
         # anything it partitioned; without chunk_aware the profiler has no
-        # histograms and size fractions apply.)
+        # histograms and size fractions apply.)  Scoped in lockstep with
+        # the attribute stage: a phase it skipped still holds the previous
+        # build's chunk attribution, which this pass would reproduce.
         partition_mod.resplit_refs(state.graph, state.registry,
-                                   state.profiler)
+                                   state.profiler,
+                                   phases=state.drift_scope)
     resplits = {}
     if multi_res and state._cfg("chunk_aware", True):
         resplits = partition_mod.resplit_hot_chunks(
@@ -412,6 +454,8 @@ def solve_best(planner: Planner, graph: PhaseGraph, profiler: PhaseProfiler,
     decisions: List[PhaseDecision] = []
     contribs: List[GlobalContrib] = []
     digest: Optional[tuple] = None
+    local: Optional[PlacementPlan] = None
+    glob: Optional[PlacementPlan] = None
     if getattr(config, "enable_local_search", True):
         local = planner.plan_local(graph, profiler, standing=standing,
                                    standing_digest=standing_digest)
@@ -419,14 +463,25 @@ def solve_best(planner: Planner, graph: PhaseGraph, profiler: PhaseProfiler,
         digest = local.graph_digest
         plans.append(local)
     if getattr(config, "enable_global_search", True):
-        glob = planner.plan_global(graph, profiler,
-                                   standing_global=standing_global)
+        # the local predicted time arms the planner's dominance bound: a
+        # global solve provably unable to win the best-of-two is skipped,
+        # and the pruned plan's certified lower bound keeps min() below
+        # picking the same winner (ties go to local either way)
+        glob = planner.plan_global(
+            graph, profiler, standing_global=standing_global,
+            prune_above=(local.predicted_iteration_time
+                         if local is not None else None))
         contribs = glob.global_contribs
         plans.append(glob)
     if not plans:
         return None, decisions, contribs, digest
-    return (min(plans, key=lambda p: p.predicted_iteration_time),
-            decisions, contribs, digest)
+    best = min(plans, key=lambda p: p.predicted_iteration_time)
+    if glob is not None and best is not glob:
+        # surface the global search's reuse behaviour on whichever plan
+        # wins (plan() does the same)
+        best.global_mode = glob.global_mode
+        best.global_rows_reused = glob.global_rows_reused
+    return best, decisions, contribs, digest
 
 
 def stage_solve(state: PipelineState, policy: str = "unimem") -> None:
@@ -449,7 +504,9 @@ def stage_solve(state: PipelineState, policy: str = "unimem") -> None:
         standing_digest=standing_digest)
     reused = sum(1 for d in state.local_decisions if d.reused)
     detail = (f"{state.plan.strategy}; reused {reused}/"
-              f"{len(state.local_decisions)} phase solves"
+              f"{len(state.local_decisions)} phase solves; "
+              f"global {state.plan.global_mode} "
+              f"({state.plan.global_rows_reused} rows reused)"
               if state.plan is not None else "no search enabled")
     state.record(policy, "solve", detail)
 

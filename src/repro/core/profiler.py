@@ -299,14 +299,23 @@ class PhaseProfiler:
                     out[phase_index] = w
         return out
 
-    def annotate_graph(self, graph: PhaseGraph) -> None:
+    def annotate_graph(self, graph: PhaseGraph,
+                       phases: Optional[Sequence[int]] = None) -> None:
         """Write measured times + access counts back into the phase graph.
 
         An object whose folded mean has faded below one access is treated as
         *unreferenced* by the phase (its ref entry is dropped): a lingering
         epsilon ref would still count as a reference and e.g. shield a
-        gone-cold object from eviction forever."""
+        gone-cold object from eviction forever.
+
+        ``phases`` scopes the rewrite to the listed phase indices (a
+        serving-tick replan annotates only the drifted phases — an
+        unchanged profile version rewrites identical values, so skipping
+        it cannot change the graph)."""
+        scope = None if phases is None else set(phases)
         for p in graph:
+            if scope is not None and p.index not in scope:
+                continue
             t = self.phase_time(p.index)
             if t > 0:
                 p.time = t

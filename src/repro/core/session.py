@@ -834,7 +834,10 @@ class Session:
             machine=self.machine, registry=self.registry, graph=self.graph,
             profiler=self.profiler, planner=self.planner,
             capacity=self.capacity, config=self.config, standing=standing,
-            tenants=dict(self.tenants) if self.tenants else None)
+            tenants=dict(self.tenants) if self.tenants else None,
+            drift_scope=(sorted(self._drift_scope)
+                         if self._drift_scope is not None
+                         and standing is not None else None))
 
     def _build_plan(self, *, recalibration: bool = False) -> None:
         assert self.graph is not None
